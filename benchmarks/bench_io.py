@@ -1,0 +1,49 @@
+"""Figure 1 reproduction: read/write scaling of the strip-parallel raster
+writer vs number of workers (the paper's MPI ranks → writer threads here).
+
+Prints ``name,us_per_call,derived`` CSV rows; derived = speedup vs 1 worker.
+"""
+from __future__ import annotations
+
+import tempfile
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.core import ImageInfo, StripeSplitter, whole
+from repro.raster import io as rio
+
+WORKERS = (1, 2, 4, 8, 12, 16, 32)
+
+
+def _time(fn, repeats=3):
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run(rows: int = 2048, cols: int = 2048, bands: int = 4) -> list:
+    """Scaled-down XS product (paper: 10699×11899×4 uint16)."""
+    info = ImageInfo(rows, cols, bands, np.uint16)
+    data = np.random.default_rng(0).integers(
+        0, 4096, size=(rows, cols, bands)
+    ).astype(np.uint16)
+    tmp = Path(tempfile.mkdtemp())
+    rows_out = []
+    base_w = base_r = None
+    for n in WORKERS:
+        regions = StripeSplitter(n_splits=max(n, 8)).split(whole(rows, cols), info)
+        strips = [(r, data[r.slices()]) for r in regions]
+        path = str(tmp / f"io_{n}.rtif")
+
+        t_w = _time(lambda: rio.parallel_write(path, info, strips, n_writers=n))
+        t_r = _time(lambda: rio.parallel_read(path, regions, n_readers=n))
+        base_w = base_w or t_w
+        base_r = base_r or t_r
+        rows_out.append((f"io_write_w{n}", t_w * 1e6, base_w / t_w))
+        rows_out.append((f"io_read_w{n}", t_r * 1e6, base_r / t_r))
+    return rows_out

@@ -1,0 +1,63 @@
+"""Kernel microbenchmarks: jnp reference path wall time on CPU (the Pallas
+kernels target TPU; interpret mode is a correctness harness, not a timing
+one).  derived = Mpixels/s (geospatial) or Mtokens/s-equivalents (LM).
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+
+
+def _time(fn, *args, repeats=3):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else jax.block_until_ready(fn(*args))
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run() -> List:
+    rng = np.random.default_rng(0)
+    out = []
+
+    H = W = 256
+    halo = 3
+    band = jnp.asarray(rng.uniform(0, 4096, (H + 2 * halo, W + 2 * halo)).astype(np.float32))
+    f = jax.jit(lambda b: ref.glcm_features_ref(b, 2, (0, 1), 8, 0.0, 4096.0))
+    t = _time(f, band)
+    out.append(("kernel_glcm_ref_256", t * 1e6, H * W / t / 1e6))
+
+    xs = jnp.asarray(rng.uniform(0, 4096, (H, W, 4)).astype(np.float32))
+    pan = jnp.asarray(rng.uniform(1, 4096, (H + 4, W + 4, 1)).astype(np.float32))
+    f = jax.jit(lambda a, b: ref.pansharpen_ref(a, b, 2))
+    t = _time(f, xs, pan)
+    out.append(("kernel_pansharpen_ref_256", t * 1e6, H * W / t / 1e6))
+
+    x = jnp.asarray(rng.uniform(0, 500, (H + 4, W + 4, 4)).astype(np.float32))
+    f = jax.jit(lambda a: ref.meanshift_ref(a, 2, 120.0, 2))
+    t = _time(f, x)
+    out.append(("kernel_meanshift_ref_256", t * 1e6, H * W / t / 1e6))
+
+    BH, S, D = 8, 512, 64
+    q = jnp.asarray(rng.normal(size=(BH, S, D)).astype(np.float32))
+    f = jax.jit(lambda a: ref.attention_ref(a, a, a, True))
+    t = _time(f, q)
+    out.append(("kernel_attention_ref_512", t * 1e6, BH * S / t / 1e6))
+
+    BHC, L, P, N = 32, 64, 32, 16
+    xs_ = jnp.asarray(rng.normal(size=(BHC, L, P)).astype(np.float32))
+    dt = jnp.asarray(rng.uniform(0.01, 0.2, (BHC, L)).astype(np.float32))
+    cum = jnp.cumsum(-dt, axis=1)
+    B = jnp.asarray(rng.normal(size=(BHC, L, N)).astype(np.float32))
+    f = jax.jit(lambda x_, d, c, b: ref.ssd_intra_ref(x_, d, c, b, b)[0])
+    t = _time(f, xs_, dt, cum, B)
+    out.append(("kernel_ssd_ref_64", t * 1e6, BHC * L / t / 1e6))
+    return out

@@ -1,0 +1,76 @@
+"""Roofline table: three terms per (arch × shape × mesh) from the dry-run
+JSONs (experiments/dryrun/).  Single-pod only per the spec; multi-pod cells
+are validated for compile success separately.
+
+derived = roofline fraction (compute_s / dominant_s); us_per_call = the
+step-time lower bound (max of the three terms) in µs.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import pathlib
+from typing import List
+
+from repro.launch.analysis import roofline_terms
+from repro.launch.mesh import HW
+
+
+def model_flops(rec: dict) -> float:
+    """6·N·D (dense) / 6·N_active·D (MoE); decode: D = batch tokens."""
+    n = rec["active_params"]
+    if rec["kind"] == "train":
+        tokens = rec["seq_len"] * rec["global_batch"]
+        return 6.0 * n * tokens
+    if rec["kind"] == "prefill":
+        tokens = rec["seq_len"] * rec["global_batch"]
+        return 2.0 * n * tokens
+    return 2.0 * n * rec["global_batch"]  # decode: one token per sequence
+
+
+def analyze_record(rec: dict) -> dict:
+    n_dev = rec["n_devices"]
+    flops_dev = rec["cost_corrected"]["flops"]
+    # streaming-implementation bytes when available (the naive-attention
+    # analysis variant's bytes include S² score materialization)
+    bytes_dev = rec["cost_corrected"].get(
+        "bytes_accessed_streaming", rec["cost_corrected"]["bytes_accessed"]
+    )
+    coll_dev = rec["collectives_corrected"]["total"]
+    terms = roofline_terms(flops_dev, bytes_dev, coll_dev, HW)
+    mf = model_flops(rec)
+    hlo_total = flops_dev * n_dev
+    return {
+        **terms,
+        "model_flops": mf,
+        "hlo_flops_total": hlo_total,
+        "useful_fraction": mf / hlo_total if hlo_total else 0.0,
+        "hbm_used_frac": rec.get("hbm_used_frac"),
+        "fits_hbm": rec.get("fits_hbm"),
+    }
+
+
+def run(dryrun_dir: str = "experiments/dryrun") -> List:
+    out = []
+    for f in sorted(glob.glob(f"{dryrun_dir}/*__single.json")):
+        rec = json.loads(pathlib.Path(f).read_text())
+        if rec.get("skipped") or "error" in rec:
+            continue
+        a = analyze_record(rec)
+        name = f"roofline_{rec['arch']}_{rec['shape']}"
+        out.append((name, a["step_time_lower_bound_s"] * 1e6,
+                    round(a["roofline_fraction"], 4)))
+    return out
+
+
+def full_table(dryrun_dir: str = "experiments/dryrun") -> List[dict]:
+    rows = []
+    for f in sorted(glob.glob(f"{dryrun_dir}/*__single.json")):
+        rec = json.loads(pathlib.Path(f).read_text())
+        if rec.get("skipped") or "error" in rec:
+            rows.append({"arch": rec["arch"], "shape": rec["shape"],
+                         "skipped": rec.get("reason", rec.get("error", ""))})
+            continue
+        a = analyze_record(rec)
+        rows.append({"arch": rec["arch"], "shape": rec["shape"], **a})
+    return rows

@@ -1,0 +1,52 @@
+"""Benchmark harness — one module per paper table/figure + roofline.
+
+    PYTHONPATH=src python -m benchmarks.run [--only io,pipelines,...]
+
+Prints ``name,us_per_call,derived`` CSV rows (derived: speedup for I/O,
+partition efficiency for pipelines, makespan ratio for balancing,
+Mpixel/s-Mtoken/s for kernels, roofline fraction for the dry-run cells).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="io,pipelines,balancing,kernels,roofline")
+    args = ap.parse_args()
+    wanted = set(args.only.split(","))
+
+    rows = []
+    if "io" in wanted:
+        from benchmarks import bench_io
+
+        rows += bench_io.run()
+    if "pipelines" in wanted:
+        from benchmarks import bench_pipelines
+
+        rows += bench_pipelines.run()
+    if "balancing" in wanted:
+        from benchmarks import bench_balancing
+
+        rows += bench_balancing.run()
+    if "kernels" in wanted:
+        from benchmarks import bench_kernels
+
+        rows += bench_kernels.run()
+    if "roofline" in wanted:
+        from benchmarks import bench_roofline
+
+        try:
+            rows += bench_roofline.run()
+        except Exception as e:  # dry-run results not generated yet
+            print(f"# roofline skipped: {e}", file=sys.stderr)
+
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,16 @@
+from repro.ckpt.checkpoint import (
+    AsyncCheckpointer,
+    latest_step,
+    restore_checkpoint,
+    save_checkpoint,
+)
+from repro.ckpt.elastic import recover, shrink_mesh
+
+__all__ = [
+    "AsyncCheckpointer",
+    "latest_step",
+    "restore_checkpoint",
+    "save_checkpoint",
+    "recover",
+    "shrink_mesh",
+]

@@ -1,0 +1,53 @@
+"""Elastic scaling + fault recovery (beyond the paper's dozen-node limit).
+
+The checkpoint format is mesh-independent (full logical arrays, strip files),
+so recovery from node loss is: rebuild a mesh from the surviving devices,
+re-derive shardings for the new mesh, and ``device_put`` the restored state.
+``shrink_mesh`` picks the largest (data × model) grid that fits the
+survivors while preserving the model-axis size when possible (TP degree is
+tied to weight divisibility; DP/FSDP degree is free).
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.ckpt.checkpoint import restore_checkpoint
+from repro.configs.base import ModelConfig
+from repro.models.sharding import ShardingRules
+
+
+def shrink_mesh(
+    devices: Sequence,
+    prefer_model: int,
+    axis_names: Tuple[str, str] = ("data", "model"),
+) -> Mesh:
+    """Largest usable (data × model) mesh from surviving devices."""
+    n = len(devices)
+    model = prefer_model
+    while model > 1 and (n % model or model > n):
+        model //= 2
+    data = n // model
+    use = list(devices)[: data * model]
+    return Mesh(np.array(use).reshape(data, model), axis_names)
+
+
+def recover(
+    ckpt_dir: str,
+    cfg: ModelConfig,
+    surviving_devices: Sequence,
+    like_state,
+    prefer_model: int = 1,
+):
+    """Restore the latest committed checkpoint onto a rebuilt mesh.
+    Returns (step, state, mesh, rules)."""
+    mesh = shrink_mesh(surviving_devices, prefer_model)
+    rules = ShardingRules(mesh, cfg)
+    pspecs = rules.param_specs(like_state)
+    step, state = restore_checkpoint(
+        ckpt_dir, like=like_state, shardings=pspecs
+    )
+    return step, state, mesh, rules

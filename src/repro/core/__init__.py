@@ -1,0 +1,74 @@
+"""Core pipeline framework — the paper's contribution in JAX.
+
+Exports the region algebra, process-object protocol, pipeline DAG, splitting
+strategies, streaming executor, and the shard_map cluster executor.
+"""
+from repro.core.region import ImageRegion, whole
+from repro.core.process_object import (
+    GeoTransform,
+    ImageInfo,
+    Source,
+    Filter,
+    PersistentFilter,
+    Mapper,
+    ProcessObject,
+    Reduction,
+    boundary_pad,
+)
+from repro.core.pipeline import Pipeline, PullPlan
+from repro.core.splitting import (
+    Splitter,
+    StripeSplitter,
+    TileSplitter,
+    AutoSplitter,
+    VMEMTileSplitter,
+)
+from repro.core.scheduling import (
+    static_schedule,
+    cost_weighted_static_schedule,
+    lpt_schedule,
+    makespan,
+)
+from repro.core.streaming import StreamingExecutor, StreamResult, execute
+from repro.core.orchestrator import Orchestrator, Stage, StageResult
+from repro.core.parallel import (
+    ParallelExecutor,
+    NotStripParallelizable,
+    build_strip_plan,
+    halo_exchange_rows,
+)
+
+__all__ = [
+    "ImageRegion",
+    "whole",
+    "GeoTransform",
+    "ImageInfo",
+    "Source",
+    "Filter",
+    "PersistentFilter",
+    "Mapper",
+    "ProcessObject",
+    "Reduction",
+    "boundary_pad",
+    "Pipeline",
+    "PullPlan",
+    "Splitter",
+    "StripeSplitter",
+    "TileSplitter",
+    "AutoSplitter",
+    "VMEMTileSplitter",
+    "static_schedule",
+    "cost_weighted_static_schedule",
+    "lpt_schedule",
+    "makespan",
+    "StreamingExecutor",
+    "StreamResult",
+    "execute",
+    "Orchestrator",
+    "Stage",
+    "StageResult",
+    "ParallelExecutor",
+    "NotStripParallelizable",
+    "build_strip_plan",
+    "halo_exchange_rows",
+]

@@ -1,0 +1,442 @@
+"""Cluster-parallel pipeline execution (paper §II.C) — TPU/JAX-native.
+
+The paper runs one *pipeline replica per MPI process*, each producing a
+different strip of the output; persistent filters aggregate state with MPI
+collectives.  Here the whole pipeline is traced once into a *local strip
+function* and partitioned with ``shard_map`` over a mesh axis:
+
+  * the output domain is decomposed into ``n`` contiguous block-rows
+    (paper's striped splitting scheme, one per device);
+  * requested-region propagation is evaluated symbolically for *every*
+    worker to derive, per source, the strip pitch (resolution scale) and the
+    halo each device must fetch from its neighbors — the MPI point-to-point
+    of the paper becomes ``lax.ppermute`` neighbor exchange;
+  * boundary devices edge-replicate their own rows (ITK boundary condition),
+    so the parallel result matches the streamed oracle — the paper's
+    region-independence invariant (§II.C.1);
+  * persistent filters accumulate per-device state which is combined with
+    ``lax.psum`` / ``pmax`` / ``pmin`` / ``all_gather`` (the paper's
+    many-to-one / many-to-many MPI patterns), then ``synthesize`` runs once.
+
+Two kinds of reads feed filters:
+
+  * *covariant reads* — the request shifts by a constant integer pitch per
+    worker with constant size (box filters, integer-ratio resampling).  The
+    planner slices the exact requested window from the haloed local shard;
+    this is checked against the probes of all workers.
+  * *coordinate reads* — requests of ``needs_origin`` filters (warps) whose
+    windows drift fractionally per worker.  The filter instead receives the
+    whole haloed local shard (full width) plus exact traced array origins
+    (``input_origins``) and samples purely by absolute coordinates.
+
+Anything else (data-dependent regions, non-affine request growth) raises
+``NotStripParallelizable`` and should run through the streaming driver.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import Mesh, PartitionSpec as P
+
+try:  # jax>=0.8 exposes shard_map at top level
+    shard_map = jax.shard_map  # type: ignore[attr-defined]
+except AttributeError:  # pragma: no cover
+    from jax.experimental.shard_map import shard_map  # type: ignore
+
+from repro.core.pipeline import Pipeline
+from repro.core.process_object import (
+    ImageInfo,
+    Mapper,
+    PersistentFilter,
+    ProcessObject,
+    Reduction,
+    Source,
+)
+from repro.core.region import ImageRegion
+
+
+class NotStripParallelizable(ValueError):
+    """Raised when the graph violates the shard_map-mode requirements."""
+
+
+# ---------------------------------------------------------------------------
+# halo exchange
+# ---------------------------------------------------------------------------
+def halo_exchange_rows(
+    x: jnp.ndarray, halo_top: int, halo_bot: int, axis_name: str, n: int
+) -> jnp.ndarray:
+    """Fetch ``halo_top`` rows from the device above and ``halo_bot`` rows
+    from the device below via ``ppermute``; boundary devices edge-replicate
+    their own first/last row (matches the streamed oracle's boundary_pad)."""
+    if n == 1 or (halo_top == 0 and halo_bot == 0):
+        pad = [(halo_top, halo_bot)] + [(0, 0)] * (x.ndim - 1)
+        return jnp.pad(x, pad, mode="edge") if (halo_top or halo_bot) else x
+    if halo_top > x.shape[0] or halo_bot > x.shape[0]:
+        raise NotStripParallelizable(
+            f"halo ({halo_top}/{halo_bot}) exceeds strip rows ({x.shape[0]}); "
+            "use fewer workers or the streaming driver"
+        )
+    idx = lax.axis_index(axis_name)
+    parts = []
+    if halo_top:
+        from_above = lax.ppermute(
+            x[-halo_top:], axis_name, [(i, i + 1) for i in range(n - 1)]
+        )
+        edge = jnp.repeat(x[:1], halo_top, axis=0)
+        parts.append(jnp.where(idx == 0, edge, from_above))
+    parts.append(x)
+    if halo_bot:
+        from_below = lax.ppermute(
+            x[:halo_bot], axis_name, [(i + 1, i) for i in range(n - 1)]
+        )
+        edge = jnp.repeat(x[-1:], halo_bot, axis=0)
+        parts.append(jnp.where(idx == n - 1, edge, from_below))
+    return jnp.concatenate(parts, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# symbolic strip-plan extraction
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class SourceStrip:
+    source: Source
+    pitch: int  # input rows per output strip (resolution scale × H)
+    halo_top: int
+    halo_bot: int
+
+
+@dataclasses.dataclass
+class StripPlan:
+    """Everything needed to run the pipeline as one SPMD program."""
+
+    n_workers: int
+    strip_rows: int  # output rows per device (H)
+    out_info: ImageInfo
+    source_strips: List[SourceStrip]
+    #: fn(local_arrays, axis_idx) -> (out_strip, {pname: state})
+    fn: Callable
+
+
+def _probe_edges(pipeline: Pipeline, mapper: Mapper, k: int, H: int, cols: int):
+    """Unclamped requested-region propagation for worker ``k``'s strip.
+    Returns a DFS-ordered list of (parent_or_None, node, region) — every
+    producer→consumer edge occurrence plus the root."""
+    infos = pipeline.update_information()
+    edges = []
+
+    def walk(parent, node: ProcessObject, region: ImageRegion):
+        edges.append((parent, node, region))
+        ups = pipeline.inputs_of(node)
+        if not ups:
+            return
+        in_infos = [infos[id(u)] for u in ups]
+        reqs = node.requested_region(region, *in_infos)
+        for u, r in zip(ups, reqs):
+            walk(node, u, r)
+
+    walk(None, mapper, ImageRegion((k * H, 0), (H, cols)))
+    return edges
+
+
+def _is_coordinate_read(pipeline, parent, node) -> bool:
+    return (
+        parent is not None
+        and getattr(parent, "needs_origin", False)
+        and not pipeline.inputs_of(node)
+    )
+
+
+def build_strip_plan(
+    pipeline: Pipeline, mapper: Mapper, n_workers: int, axis_name: str = "workers"
+) -> StripPlan:
+    infos = pipeline.update_information()
+    out_info = infos[id(mapper)]
+    H = math.ceil(out_info.rows / n_workers)
+    cols = out_info.cols
+
+    # --- probe EVERY worker's strip (host-side, cheap) -----------------------
+    probes = [_probe_edges(pipeline, mapper, k, H, cols) for k in range(n_workers)]
+    if any(len(p) != len(probes[0]) for p in probes):
+        raise NotStripParallelizable("graph shape varies per strip")
+
+    #: per edge occurrence (keyed by (id(node), worker-0 region)):
+    pitches: Dict[Tuple[int, ImageRegion], int] = {}
+    #: per source: list of (pitch_or_None, [row ranges over all k])
+    src_reads: Dict[int, List[Tuple[Optional[int], List[Tuple[int, int]]]]] = {}
+
+    for i, (parent0, node0, r0) in enumerate(probes[0]):
+        occs = [p[i][2] for p in probes]
+        if any(p[i][1] is not node0 for p in probes):
+            raise NotStripParallelizable("graph traversal varies per strip")
+        is_src = not pipeline.inputs_of(node0)
+        coord_read = _is_coordinate_read(pipeline, parent0, node0)
+        row_ranges = [(r.row0, r.row1) for r in occs]
+        if coord_read:
+            # geometry is free-form; the filter samples by absolute coords
+            src_reads.setdefault(id(node0), []).append((None, row_ranges))
+            continue
+        # covariant edge: constant size, constant integer pitch, no col drift
+        row_pitches = {b.row0 - a.row0 for a, b in zip(occs, occs[1:])}
+        col_drifts = {b.col0 - a.col0 for a, b in zip(occs, occs[1:])}
+        if any(a.size != b.size for a, b in zip(occs, occs[1:])):
+            raise NotStripParallelizable(
+                f"{node0.name}: requested-region size varies per strip"
+            )
+        if len(row_pitches) > 1 or col_drifts - {0}:
+            raise NotStripParallelizable(
+                f"{node0.name}: requested regions are not translation-covariant "
+                f"(row pitches {sorted(row_pitches)}, col drifts {sorted(col_drifts)})"
+            )
+        pitch = row_pitches.pop() if row_pitches else 0  # 0 only when n_workers==1
+        pitches[(id(node0), r0)] = pitch
+        if is_src:
+            if n_workers > 1 and pitch <= 0:
+                raise NotStripParallelizable(f"{node0.name}: non-positive pitch {pitch}")
+            src_reads.setdefault(id(node0), []).append((pitch, row_ranges))
+
+    # --- per-source sharding pitch + combined halo over all reads/workers ----
+    source_strips: List[SourceStrip] = []
+    strip_by_source: Dict[int, SourceStrip] = {}
+    for src in pipeline.sources():
+        recs = src_reads.get(id(src))
+        if not recs:
+            continue
+        cov_pitches = {p for p, _ in recs if p is not None}
+        if len(cov_pitches) > 1:
+            raise NotStripParallelizable(
+                f"{src.name}: conflicting pitches across reads {sorted(cov_pitches)}"
+            )
+        if cov_pitches:
+            pitch = cov_pitches.pop()
+            if n_workers == 1:
+                pitch = infos[id(src)].rows  # whole image on the single worker
+        else:
+            pitch = math.ceil(infos[id(src)].rows / n_workers)
+        halo_top = halo_bot = 0
+        for _, row_ranges in recs:
+            for k, (a0, a1) in enumerate(row_ranges):
+                halo_top = max(halo_top, k * pitch - a0)
+                halo_bot = max(halo_bot, a1 - (k + 1) * pitch)
+        ss = SourceStrip(src, pitch, max(0, halo_top), max(0, halo_bot))
+        source_strips.append(ss)
+        strip_by_source[id(src)] = ss
+
+    # --- build the local strip closure (worker-0 geometry, shared by all) ----
+    persistent = pipeline.persistent_nodes()
+
+    def build(node: ProcessObject, region: ImageRegion, ctx, coord_read: bool = False):
+        """Returns (data, (traced_row0, static_col0)) — the array's absolute
+        origin.  ctx = dict(arrays={source id: local haloed array},
+        axis_idx=traced, pstates={name: state})."""
+        key = (id(node), region, coord_read)
+        if key in ctx["memo"]:
+            return ctx["memo"][key]
+        own_info = infos[id(node)]
+        ups = pipeline.inputs_of(node)
+        kk = ctx["axis_idx"]  # traced worker index
+        if not ups:
+            ss = strip_by_source[id(node)]
+            local = ctx["arrays"][id(node)]
+            if coord_read:
+                # whole haloed shard, full width; exact traced origin
+                data = local
+                origin = (kk * ss.pitch - ss.halo_top, 0)
+            else:
+                # local array covers absolute rows
+                # [k·pitch − halo_top, (k+1)·pitch + halo_bot)
+                off = region.row0 + ss.halo_top  # worker-0 geometry
+                assert off >= 0, (node.name, region, ss)
+                data = lax.slice_in_dim(local, off, off + region.rows, axis=0)
+                # columns: static clamp + edge pad (requests may spill sideways)
+                c0, c1 = max(0, region.col0), min(own_info.cols, region.col1)
+                data = data[:, c0:c1]
+                pl_, pr_ = c0 - region.col0, region.col1 - c1
+                if pl_ or pr_:
+                    data = jnp.pad(
+                        data,
+                        [(0, 0), (pl_, pr_)] + [(0, 0)] * (data.ndim - 2),
+                        mode="edge",
+                    )
+                origin = (region.row0 + kk * ss.pitch, region.col0)
+        else:
+            in_infos = [infos[id(u)] for u in ups]
+            reqs = node.requested_region(region, *in_infos)
+            node_origin_aware = getattr(node, "needs_origin", False)
+            child_results = [
+                build(u, r, ctx, coord_read=_is_coordinate_read(pipeline, node, u))
+                for u, r in zip(ups, reqs)
+            ]
+            ins = [d for d, _ in child_results]
+            in_origins = [o for _, o in child_results]
+            pitch_node = pitches[(id(node), region)]
+            if isinstance(node, PersistentFilter):
+                st = ctx["pstates"][node.name]
+                padded = n_workers > 1 and pitch_node * n_workers != own_info.rows
+                if padded and not node.supports_mask:
+                    raise NotStripParallelizable(
+                        f"{node.name}: rows ({out_info.rows}) don't divide over "
+                        f"{n_workers} workers and the filter is not "
+                        "mask-aware (set supports_mask and handle `mask`)"
+                    )
+                if node.supports_mask:
+                    rows_abs = region.row0 + kk * pitch_node + jnp.arange(region.rows)
+                    mask = ((rows_abs >= 0) & (rows_abs < own_info.rows))[:, None, None]
+                    ctx["pstates"][node.name] = node.accumulate(
+                        st, region, *ins, mask=mask
+                    )
+                else:
+                    ctx["pstates"][node.name] = node.accumulate(st, region, *ins)
+            if node_origin_aware:
+                data = node.generate(
+                    region, *ins,
+                    origin=(region.row0 + kk * pitch_node, region.col0),
+                    input_origins=tuple(in_origins),
+                )
+            else:
+                data = node.generate(region, *ins)
+            origin = (region.row0 + kk * pitch_node, region.col0)
+        ctx["memo"][key] = (data, origin)
+        return data, origin
+
+    def strip_fn(local_arrays: Dict[int, jnp.ndarray], axis_idx):
+        ctx = {
+            "arrays": local_arrays,
+            "axis_idx": axis_idx,
+            "pstates": {p.name: p.reset() for p in persistent},
+            "memo": {},
+        }
+        out, _ = build(mapper, ImageRegion((0, 0), (H, cols)), ctx)
+        return out, ctx["pstates"]
+
+    return StripPlan(
+        n_workers=n_workers,
+        strip_rows=H,
+        out_info=out_info,
+        source_strips=source_strips,
+        fn=strip_fn,
+    )
+
+
+# ---------------------------------------------------------------------------
+# the distributed executor
+# ---------------------------------------------------------------------------
+def _combine_collective(red: Reduction, val, axis_name):
+    if red.kind == "sum":
+        return lax.psum(val, axis_name)
+    if red.kind == "max":
+        return lax.pmax(val, axis_name)
+    if red.kind == "min":
+        return lax.pmin(val, axis_name)
+    if red.kind == "concat":
+        return lax.all_gather(val, axis_name).reshape((-1,) + tuple(val.shape[1:]))
+    raise ValueError(red.kind)
+
+
+class ParallelExecutor:
+    """Distribute one pipeline over a device mesh axis (paper §II.C.2)."""
+
+    def __init__(
+        self,
+        pipeline: Pipeline,
+        mapper: Mapper,
+        devices: Optional[Sequence] = None,
+        axis_name: str = "workers",
+    ):
+        self.pipeline = pipeline
+        self.mapper = mapper
+        self.devices = list(devices if devices is not None else jax.devices())
+        self.axis_name = axis_name
+        self.n = len(self.devices)
+        self.plan = build_strip_plan(pipeline, mapper, self.n, axis_name)
+        self.mesh = Mesh(np.array(self.devices), (axis_name,))
+
+    # -- global input staging --------------------------------------------------
+    def _padded_global(self, ss: SourceStrip) -> np.ndarray:
+        """Materialize a source and edge-pad its rows to n × pitch."""
+        info = self.pipeline.info(ss.source)
+        arr = np.asarray(ss.source.generate(info.full_region))
+        if arr.ndim == 2:
+            arr = arr[..., None]
+        want = self.n * ss.pitch
+        if want < arr.shape[0]:
+            raise NotStripParallelizable(
+                f"{ss.source.name}: pitch×workers ({want}) < image rows {arr.shape[0]}"
+            )
+        if want > arr.shape[0]:
+            pad = want - arr.shape[0]
+            arr = np.pad(arr, [(0, pad), (0, 0), (0, 0)], mode="edge")
+        return arr
+
+    def build_spmd(self):
+        """Return (jitted SPMD callable, list of global input arrays)."""
+        plan, axis, n = self.plan, self.axis_name, self.n
+        ids = [id(ss.source) for ss in plan.source_strips]
+        halos = {id(ss.source): (ss.halo_top, ss.halo_bot) for ss in plan.source_strips}
+        persistent = self.pipeline.persistent_nodes()
+        reds = {p.name: p.state_reductions for p in persistent}
+
+        def worker(*shards):
+            idx = lax.axis_index(axis)
+            local = {}
+            for sid, x in zip(ids, shards):
+                ht, hb = halos[sid]
+                local[sid] = halo_exchange_rows(x, ht, hb, axis, n)
+            out, pstates = plan.fn(local, idx)
+            agg = {
+                name: {
+                    k: _combine_collective(reds[name][k], v, axis)
+                    for k, v in st.items()
+                }
+                for name, st in pstates.items()
+            }
+            return out, agg
+
+        in_specs = tuple(P(axis, None, None) for _ in ids)
+        out_specs = (P(axis, None, None), P())  # states fully reduced → replicated
+        fn = shard_map(worker, mesh=self.mesh, in_specs=in_specs, out_specs=out_specs)
+        globals_ = [self._padded_global(ss) for ss in plan.source_strips]
+        return jax.jit(fn), globals_
+
+    def run(self, keep_outputs: bool = False):
+        from repro.core.streaming import StreamResult  # cycle-free local import
+
+        fn, globals_ = self.build_spmd()
+        out, agg = fn(*globals_)
+        out = np.asarray(out)[: self.plan.out_info.rows]  # crop row padding
+        info = self.plan.out_info
+        self.mapper.begin(info)
+        outputs = []
+        H = self.plan.strip_rows
+        for w in range(self.n):
+            r0, r1 = w * H, min((w + 1) * H, info.rows)
+            if r0 >= r1:
+                continue
+            region = ImageRegion((r0, 0), (r1 - r0, info.cols))
+            data = out[r0:r1]
+            self.mapper.consume(region, data)
+            if keep_outputs:
+                outputs.append(data)
+        presults = {
+            p.name: p.synthesize(agg[p.name])
+            for p in self.pipeline.persistent_nodes()
+        }
+        self.mapper.end()
+        return StreamResult(
+            regions_processed=self.n,
+            pixels_processed=info.rows * info.cols,
+            persistent_results=presults,
+            outputs=outputs if keep_outputs else None,
+        )
+
+    def lower(self):
+        """Lower the SPMD program without running (dry-run path)."""
+        fn, globals_ = self.build_spmd()
+        args = [jax.ShapeDtypeStruct(g.shape, g.dtype) for g in globals_]
+        with self.mesh:
+            return fn.lower(*args)

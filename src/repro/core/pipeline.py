@@ -1,0 +1,202 @@
+"""Pipeline DAG + the three-phase pull protocol (paper §II.B).
+
+``Pipeline`` wires process objects into a directed graph and implements:
+
+  * ``update_information()``   — phase 1, metadata downstream;
+  * ``pull(node, region)``     — phases 2+3 for one requested region (eager);
+  * ``compile_pull(node, region)`` — symbolic version: extracts the set of
+    source reads plus a pure jax function mapping source arrays → output
+    pixels.  This is what the shard_map parallel driver partitions, and what
+    ``jax.jit`` compiles for the streaming driver's hot loop.
+
+Border semantics: at *every* producer→consumer edge, the consumer's request is
+clamped against the producer's largest possible region and edge-replicated
+back out (ITK boundary condition), so requests may safely spill over borders.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.process_object import (
+    ImageInfo,
+    Mapper,
+    PersistentFilter,
+    ProcessObject,
+    Source,
+    boundary_pad,
+)
+from repro.core.region import ImageRegion
+
+
+class Pipeline:
+    def __init__(self):
+        self._inputs: Dict[int, List[ProcessObject]] = {}
+        self._nodes: List[ProcessObject] = []
+        self._infos: Optional[Dict[int, ImageInfo]] = None
+
+    # -- graph construction --------------------------------------------------
+    def add(self, obj: ProcessObject, inputs: Sequence[ProcessObject] = ()) -> ProcessObject:
+        if len(inputs) != obj.n_inputs:
+            raise ValueError(
+                f"{obj.name}: expected {obj.n_inputs} inputs, got {len(inputs)}"
+            )
+        for up in inputs:
+            if id(up) not in self._inputs:
+                raise ValueError(f"{obj.name}: input {up.name} not in pipeline")
+        self._nodes.append(obj)
+        self._inputs[id(obj)] = list(inputs)
+        self._infos = None  # invalidate
+        return obj
+
+    def inputs_of(self, obj: ProcessObject) -> List[ProcessObject]:
+        return self._inputs[id(obj)]
+
+    @property
+    def nodes(self) -> List[ProcessObject]:
+        return list(self._nodes)
+
+    def sources(self) -> List[Source]:
+        return [n for n in self._nodes if isinstance(n, Source)]
+
+    def mappers(self) -> List[Mapper]:
+        return [n for n in self._nodes if isinstance(n, Mapper)]
+
+    def persistent_nodes(self) -> List[PersistentFilter]:
+        return [n for n in self._nodes if isinstance(n, PersistentFilter)]
+
+    # -- phase 1: UpdateOutputInformation -------------------------------------
+    def update_information(self) -> Dict[int, ImageInfo]:
+        """Propagate metadata downstream (nodes are stored in insertion order,
+        which ``add`` guarantees is topological)."""
+        if self._infos is None:
+            infos: Dict[int, ImageInfo] = {}
+            for node in self._nodes:
+                in_infos = [infos[id(up)] for up in self._inputs[id(node)]]
+                infos[id(node)] = node.output_info(*in_infos)
+            self._infos = infos
+        return self._infos
+
+    def info(self, node: ProcessObject) -> ImageInfo:
+        return self.update_information()[id(node)]
+
+    # -- phases 2+3: eager pull ------------------------------------------------
+    def pull(
+        self,
+        node: ProcessObject,
+        out_region: ImageRegion,
+        persistent_hook: Optional[Callable] = None,
+        _cache: Optional[Dict] = None,
+    ) -> jnp.ndarray:
+        """Produce pixels of ``node`` for ``out_region`` (clamped + padded to
+        the exact requested size).  ``persistent_hook(node, region, inputs)``
+        is invoked for every PersistentFilter encountered (the streaming /
+        parallel drivers use it to accumulate state)."""
+        infos = self.update_information()
+        cache = _cache if _cache is not None else {}
+        key = (id(node), out_region)
+        if key in cache:
+            return cache[key]
+
+        own_info = infos[id(node)]
+        clamped = out_region.clamp(own_info.full_region)
+        if clamped.is_empty():
+            raise ValueError(f"{node.name}: request {out_region} outside image")
+
+        ups = self._inputs[id(node)]
+        if not ups:  # source
+            data = node.generate(clamped)  # type: ignore[call-arg]
+        else:
+            in_infos = [infos[id(u)] for u in ups]
+            reqs = node.requested_region(clamped, *in_infos)
+            inputs = [
+                self.pull(u, r, persistent_hook, cache) for u, r in zip(ups, reqs)
+            ]
+            if isinstance(node, PersistentFilter) and persistent_hook is not None:
+                persistent_hook(node, clamped, inputs)
+            if getattr(node, "needs_origin", False):
+                data = node.generate(
+                    clamped,
+                    *inputs,
+                    origin=clamped.index,
+                    input_origins=tuple(r.index for r in reqs),
+                )
+            else:
+                data = node.generate(clamped, *inputs)
+        expect = (clamped.rows, clamped.cols)
+        if tuple(data.shape[:2]) != expect:
+            raise ValueError(
+                f"{node.name}: generate() returned {data.shape[:2]}, expected {expect}"
+            )
+        data = boundary_pad(data, clamped, out_region)
+        cache[key] = data
+        return data
+
+    # -- symbolic pull: extract (source reads, pure function) ------------------
+    def compile_pull(self, node: ProcessObject, out_region: ImageRegion) -> "PullPlan":
+        """Build a :class:`PullPlan` whose ``fn`` maps source arrays (covering
+        the plan's clamped source regions, in plan order) to the pixels of
+        ``node`` over ``out_region``.  ``fn`` is pure jax and jit-able."""
+        infos = self.update_information()
+        reads: List[Tuple[Source, ImageRegion, ImageRegion]] = []
+        read_index: Dict[Tuple[int, ImageRegion], int] = {}
+        steps: List[Tuple] = []  # closure program, built by recursion
+
+        def build(n: ProcessObject, region: ImageRegion) -> Callable:
+            own_info = infos[id(n)]
+            clamped = region.clamp(own_info.full_region)
+            ups = self._inputs[id(n)]
+            if not ups:
+                k = (id(n), clamped)
+                if k not in read_index:
+                    read_index[k] = len(reads)
+                    reads.append((n, clamped, region))  # type: ignore[arg-type]
+                idx = read_index[k]
+
+                def run_source(arrays, _idx=idx, _clamped=clamped, _region=region):
+                    return boundary_pad(arrays[_idx], _clamped, _region)
+
+                return run_source
+
+            in_infos = [infos[id(u)] for u in ups]
+            reqs = n.requested_region(clamped, *in_infos)
+            child_fns = [build(u, r) for u, r in zip(ups, reqs)]
+
+            def run_node(arrays, _n=n, _clamped=clamped, _region=region,
+                         _fns=child_fns, _reqs=reqs):
+                ins = [f(arrays) for f in _fns]
+                if getattr(_n, "needs_origin", False):
+                    out = _n.generate(
+                        _clamped,
+                        *ins,
+                        origin=_clamped.index,
+                        input_origins=tuple(r.index for r in _reqs),
+                    )
+                else:
+                    out = _n.generate(_clamped, *ins)
+                return boundary_pad(out, _clamped, _region)
+
+            return run_node
+
+        fn = build(node, out_region)
+        return PullPlan(reads=reads, fn=fn, out_region=out_region)
+
+
+@dataclasses.dataclass
+class PullPlan:
+    """``reads``: list of (source, clamped_region, requested_region);
+    ``fn(arrays)`` with arrays[i] covering reads[i]'s clamped region returns
+    the output pixels."""
+
+    reads: List[Tuple[Source, ImageRegion, ImageRegion]]
+    fn: Callable[[Sequence[jnp.ndarray]], jnp.ndarray]
+    out_region: ImageRegion
+
+    def read_sources(self) -> List[jnp.ndarray]:
+        return [s.generate(clamped) for s, clamped, _ in self.reads]
+
+    def run(self) -> jnp.ndarray:
+        return self.fn(self.read_sources())

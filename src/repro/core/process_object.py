@@ -1,0 +1,253 @@
+"""Process objects: Sources, Filters, Mappers (paper §II.B–C).
+
+A pipeline is a directed graph of process objects.  The execution protocol is
+the three-phase pull of ITK/OTB, realized functionally:
+
+  1. ``output_info``      — metadata flows *downstream* (sources derive it
+                            from their metadata; filters may transform it,
+                            e.g. resampling changes the output size).
+  2. ``requested_region`` — region requests flow *upstream*; filters may
+                            enlarge the request (neighborhood halos).
+  3. ``generate``         — pixel data flows *downstream*, one requested
+                            region at a time.
+
+``generate`` is a pure array→array function (jit-compatible); all region
+bookkeeping happens on the host in the streaming / parallel drivers.
+
+The paper's key dichotomy (§II.C.1):
+
+  * region-independent process objects produce identical pixels whatever the
+    requested region → transparently parallelizable by domain decomposition;
+  * *Persistent* process objects accumulate state across regions
+    (``reset`` / ``accumulate`` / ``synthesize``); their parallel flavor
+    aggregates state with collectives (MPI in the paper, ``lax.psum`` & co
+    here).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.region import ImageRegion, whole
+
+
+@dataclasses.dataclass(frozen=True)
+class GeoTransform:
+    """Affine geo-referencing: pixel (row, col) -> world (x, y)."""
+
+    origin_x: float = 0.0
+    origin_y: float = 0.0
+    spacing_x: float = 1.0
+    spacing_y: float = -1.0  # north-up rasters have negative y spacing
+
+    def pixel_to_world(self, row: float, col: float) -> Tuple[float, float]:
+        return (self.origin_x + col * self.spacing_x, self.origin_y + row * self.spacing_y)
+
+    def scaled(self, frow: float, fcol: float) -> "GeoTransform":
+        """Geo transform after resampling by factors (frow, fcol) in pixel density."""
+        return GeoTransform(self.origin_x, self.origin_y, self.spacing_x / fcol, self.spacing_y / frow)
+
+
+@dataclasses.dataclass(frozen=True)
+class ImageInfo:
+    """Largest-possible-region metadata (paper: "information ... generated from
+    metadatas" — image size, pixel spacing, etc.)."""
+
+    rows: int
+    cols: int
+    bands: int
+    dtype: Any = np.float32
+    geo: GeoTransform = GeoTransform()
+    nodata: Optional[float] = None
+
+    @property
+    def full_region(self) -> ImageRegion:
+        return whole(self.rows, self.cols)
+
+    @property
+    def bytes_per_pixel(self) -> int:
+        return int(np.dtype(self.dtype).itemsize) * self.bands
+
+    @property
+    def total_bytes(self) -> int:
+        return self.rows * self.cols * self.bytes_per_pixel
+
+
+class ProcessObject:
+    """Base class. Subclasses override the three protocol methods."""
+
+    #: number of image inputs (0 for sources)
+    n_inputs: int = 1
+    #: paper §II.C.1 — identical pixels whatever the requested region?
+    region_independent: bool = True
+    #: relative per-pixel cost estimate, drives cost-weighted load balancing
+    cost_per_pixel: float = 1.0
+
+    def __init__(self, name: Optional[str] = None):
+        self.name = name or type(self).__name__
+
+    # -- phase 1: metadata downstream ---------------------------------------
+    def output_info(self, *input_infos: ImageInfo) -> ImageInfo:
+        if self.n_inputs == 0:
+            raise NotImplementedError(f"{self.name}: sources must implement output_info()")
+        return input_infos[0]
+
+    # -- phase 2: requested region upstream ----------------------------------
+    def requested_region(
+        self, out_region: ImageRegion, *input_infos: ImageInfo
+    ) -> Tuple[ImageRegion, ...]:
+        """Input region(s) needed to produce ``out_region``.
+
+        May exceed the input's largest possible region; the driver clamps and
+        boundary-pads.  Default: same region for every input.
+        """
+        return tuple(out_region for _ in range(self.n_inputs))
+
+    # -- phase 3: data downstream ---------------------------------------------
+    #: set True on filters whose pixels depend on *absolute* output
+    #: coordinates (warps, coordinate-driven sources).  Their ``generate``
+    #: receives two extra kwargs:
+    #:   origin        — absolute (row0, col0) of the output region (row0 is a
+    #:                   traced scalar under the SPMD strip plan);
+    #:   input_origins — per input, absolute (row0, col0) of the array's first
+    #:                   pixel (row0 possibly traced; col0 always static).
+    #: Such filters must do ALL coordinate arithmetic from these, never from
+    #: ``out_region.index`` / their recomputed requested region.
+    needs_origin: bool = False
+
+    def generate(self, out_region: ImageRegion, *inputs: jnp.ndarray) -> jnp.ndarray:
+        """Produce pixels for ``out_region``.
+
+        ``inputs[i]`` has shape (req_rows, req_cols, bands_i) covering exactly
+        ``requested_region(out_region, ...)[i]`` (boundary-padded) — except
+        for ``needs_origin`` filters under the strip plan, where the driver
+        may widen input columns; use ``input_origins``.  Must be a pure jax
+        function of the arrays — region arguments only select static
+        shapes/offsets.
+        """
+        raise NotImplementedError
+
+    def __repr__(self) -> str:
+        return f"<{type(self).__name__} {self.name!r}>"
+
+
+class Source(ProcessObject):
+    """Initiates a pipeline (paper: e.g. image file reader).
+
+    Region independence for a source means pixels are a pure function of
+    absolute pixel coordinates (true for file readers and coordinate-driven
+    synthetic sources).
+    """
+
+    n_inputs = 0
+
+    def output_info(self) -> ImageInfo:  # type: ignore[override]
+        raise NotImplementedError
+
+    def generate(self, out_region: ImageRegion) -> jnp.ndarray:  # type: ignore[override]
+        raise NotImplementedError
+
+
+class Filter(ProcessObject):
+    """Transforms data objects."""
+
+
+@dataclasses.dataclass
+class Reduction:
+    """How to combine per-region / per-device persistent state (paper: MPI
+    many-to-one / many-to-many patterns in ``Synthesis``)."""
+
+    kind: str  # 'sum' | 'min' | 'max' | 'concat'
+
+    def combine(self, a, b):
+        if self.kind == "sum":
+            return jnp.asarray(a) + jnp.asarray(b)
+        if self.kind == "min":
+            return jnp.minimum(a, b)
+        if self.kind == "max":
+            return jnp.maximum(a, b)
+        if self.kind == "concat":
+            return jnp.concatenate([jnp.atleast_1d(a), jnp.atleast_1d(b)], axis=0)
+        raise ValueError(self.kind)
+
+
+class PersistentFilter(Filter):
+    """Persists state across region updates (paper §II.C.1, e.g. pixel
+    statistics).  ``state_reductions`` maps state-pytree leaves (by key) to the
+    collective used to aggregate them across regions/devices."""
+
+    region_independent = False  # the *state* depends on which regions were seen
+    #: dict key -> Reduction for each entry of the state dict
+    state_reductions: Dict[str, Reduction] = {}
+    #: SPMD strips may carry padded rows past the image border; mask-aware
+    #: filters accept ``mask`` (rows, 1, 1 bool, True = valid output row) in
+    #: ``accumulate`` and ignore padded rows.  Filters without mask support can
+    #: only run in parallel mode when rows divide evenly across workers.
+    supports_mask: bool = False
+
+    def reset(self) -> Dict[str, jnp.ndarray]:
+        raise NotImplementedError
+
+    def accumulate(
+        self,
+        state: Dict[str, jnp.ndarray],
+        out_region: ImageRegion,
+        *inputs: jnp.ndarray,
+        mask: Optional[jnp.ndarray] = None,
+    ) -> Dict[str, jnp.ndarray]:
+        raise NotImplementedError
+
+    def synthesize(self, state: Dict[str, jnp.ndarray]) -> Dict[str, jnp.ndarray]:
+        """Final many-to-one step, runs after all aggregation."""
+        return state
+
+    def combine_states(self, a: Dict[str, jnp.ndarray], b: Dict[str, jnp.ndarray]):
+        return {k: self.state_reductions[k].combine(a[k], b[k]) for k in a}
+
+    # Persistent filters are pass-through for pixel data by default.
+    def generate(self, out_region: ImageRegion, *inputs: jnp.ndarray) -> jnp.ndarray:
+        return inputs[0]
+
+
+class Mapper(ProcessObject):
+    """Terminates a pipeline: writes to disk or hands data to another system.
+
+    Drivers call ``begin(info)`` once, then ``consume(region, data)`` for each
+    produced region (possibly from several workers for parallel mappers), then
+    ``end()``.
+    """
+
+    def begin(self, info: ImageInfo) -> None:
+        pass
+
+    def consume(self, out_region: ImageRegion, data: np.ndarray) -> None:
+        raise NotImplementedError
+
+    def end(self) -> None:
+        pass
+
+    def generate(self, out_region: ImageRegion, *inputs: jnp.ndarray) -> jnp.ndarray:
+        # mappers pass pixels through unchanged (identity in the data graph)
+        return inputs[0]
+
+
+def boundary_pad(
+    array: jnp.ndarray, have: ImageRegion, want: ImageRegion
+) -> jnp.ndarray:
+    """Edge-replicate ``array`` (covering ``have``) out to ``want`` ⊇ have.
+
+    This is the boundary condition applied when a requested region spills over
+    the image border (ITK's ZeroFlux/replicate boundary).
+    """
+    if have == want:
+        return array
+    pad_top = have.row0 - want.row0
+    pad_bot = want.row1 - have.row1
+    pad_left = have.col0 - want.col0
+    pad_right = want.col1 - have.col1
+    assert min(pad_top, pad_bot, pad_left, pad_right) >= 0, (have, want)
+    pad_width = [(pad_top, pad_bot), (pad_left, pad_right)] + [(0, 0)] * (array.ndim - 2)
+    return jnp.pad(array, pad_width, mode="edge")

@@ -1,0 +1,105 @@
+"""Splitting strategies (paper §II.B, §II.D).
+
+The mapper chooses how the output image is divided into regions: striped or
+tiled with fixed dimensions, or automatically from the memory specification
+and the number of workers.  Every splitter must tile the domain *exactly*
+(cover every pixel once) — property-tested in tests/test_splitting.py.
+"""
+from __future__ import annotations
+
+import math
+from typing import List
+
+import numpy as np
+
+from repro.core.process_object import ImageInfo
+from repro.core.region import ImageRegion
+
+
+class Splitter:
+    def split(self, region: ImageRegion, info: ImageInfo) -> List[ImageRegion]:
+        raise NotImplementedError
+
+
+class StripeSplitter(Splitter):
+    """Horizontal strips — the paper's row-wise scheme (fast for the
+    row-interleaved GeoTiff layout, §II.D [16])."""
+
+    def __init__(self, n_splits: int | None = None, stripe_rows: int | None = None):
+        if (n_splits is None) == (stripe_rows is None):
+            raise ValueError("specify exactly one of n_splits / stripe_rows")
+        self.n_splits = n_splits
+        self.stripe_rows = stripe_rows
+
+    def split(self, region: ImageRegion, info: ImageInfo) -> List[ImageRegion]:
+        rows = region.rows
+        if self.stripe_rows is not None:
+            step = max(1, self.stripe_rows)
+        else:
+            step = max(1, math.ceil(rows / max(1, self.n_splits)))
+        out = []
+        r = region.row0
+        while r < region.row1:
+            h = min(step, region.row1 - r)
+            out.append(ImageRegion((r, region.col0), (h, region.cols)))
+            r += h
+        return out
+
+
+class TileSplitter(Splitter):
+    """Fixed-dimension tiles."""
+
+    def __init__(self, tile_rows: int, tile_cols: int):
+        if tile_rows <= 0 or tile_cols <= 0:
+            raise ValueError("tile dims must be positive")
+        self.tile_rows = tile_rows
+        self.tile_cols = tile_cols
+
+    def split(self, region: ImageRegion, info: ImageInfo) -> List[ImageRegion]:
+        out = []
+        for r in range(region.row0, region.row1, self.tile_rows):
+            h = min(self.tile_rows, region.row1 - r)
+            for c in range(region.col0, region.col1, self.tile_cols):
+                w = min(self.tile_cols, region.col1 - c)
+                out.append(ImageRegion((r, c), (h, w)))
+        return out
+
+
+class AutoSplitter(Splitter):
+    """Paper §II.D: split count "automatically computed using the system
+    specifications (memory and number of MPI processes)".
+
+    Chooses striped regions such that one region's pixel buffer fits in
+    ``memory_budget_bytes`` and the number of splits is a multiple of
+    ``n_workers`` (so the static schedule is balanced)."""
+
+    def __init__(self, memory_budget_bytes: int, n_workers: int = 1):
+        if memory_budget_bytes <= 0 or n_workers <= 0:
+            raise ValueError("budget and n_workers must be positive")
+        self.memory_budget_bytes = memory_budget_bytes
+        self.n_workers = n_workers
+
+    def split(self, region: ImageRegion, info: ImageInfo) -> List[ImageRegion]:
+        bytes_per_row = max(1, region.cols * info.bytes_per_pixel)
+        rows_per_split = max(1, self.memory_budget_bytes // bytes_per_row)
+        n = math.ceil(region.rows / rows_per_split)
+        # round the split count UP to a multiple of n_workers for balance
+        n = max(self.n_workers, math.ceil(n / self.n_workers) * self.n_workers)
+        n = min(n, region.rows) if region.rows > 0 else n
+        return StripeSplitter(n_splits=n).split(region, info)
+
+
+class VMEMTileSplitter(Splitter):
+    """TPU-adapted auto splitter: two-level budget.  Picks MXU-aligned tiles
+    (multiples of ``align``, default 128 lanes) whose working set fits a VMEM
+    budget — the same planner feeds Pallas BlockSpec shapes."""
+
+    def __init__(self, vmem_budget_bytes: int = 64 * 2**20, align: int = 128):
+        self.vmem_budget_bytes = vmem_budget_bytes
+        self.align = align
+
+    def split(self, region: ImageRegion, info: ImageInfo) -> List[ImageRegion]:
+        bpp = info.bytes_per_pixel
+        side = int(math.sqrt(self.vmem_budget_bytes / max(1, bpp)))
+        side = max(self.align, (side // self.align) * self.align)
+        return TileSplitter(side, side).split(region, info)

@@ -1,0 +1,3 @@
+from repro.data.pipeline import BOS, Prefetcher, SyntheticTokens
+
+__all__ = ["BOS", "Prefetcher", "SyntheticTokens"]

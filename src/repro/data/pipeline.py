@@ -1,0 +1,100 @@
+"""Synthetic token data pipeline: deterministic, sharded, prefetched.
+
+The pipeline is the *source* process object of the LM training graph in the
+paper's terms: region = a global-batch step, decomposed across hosts (each
+host materializes only its slice), streamed with background prefetch
+(bounded queue — the paper's bounded-memory streaming).
+
+Documents are Zipf-ish token runs with local n-gram structure (so loss
+actually falls during the example runs), packed into fixed-length sequences
+with BOS separators; labels are next-token shifted.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Dict, Iterator, Optional
+
+import numpy as np
+
+BOS = 1
+
+
+class SyntheticTokens:
+    def __init__(
+        self,
+        vocab_size: int,
+        seq_len: int,
+        global_batch: int,
+        seed: int = 0,
+        host_index: int = 0,
+        host_count: int = 1,
+        order: int = 2,
+    ):
+        assert global_batch % host_count == 0
+        self.vocab = vocab_size
+        self.seq = seq_len
+        self.local_batch = global_batch // host_count
+        self.host_index = host_index
+        self.seed = seed
+        # deterministic bigram table: each token prefers a few successors
+        rng = np.random.default_rng(seed)
+        self.n_next = 4
+        self.table = rng.integers(
+            2, vocab_size, size=(min(vocab_size, 4096), self.n_next)
+        ).astype(np.int32)
+
+    def batch(self, step: int) -> Dict[str, np.ndarray]:
+        rng = np.random.default_rng(
+            (self.seed * 1_000_003 + step) * 64 + self.host_index
+        )
+        B, S = self.local_batch, self.seq + 1
+        toks = np.empty((B, S), np.int32)
+        cur = rng.integers(2, min(self.vocab, 4096), size=B).astype(np.int32)
+        toks[:, 0] = BOS
+        for t in range(1, S):
+            choose = rng.integers(0, self.n_next, size=B)
+            nxt = self.table[cur % self.table.shape[0], choose]
+            # 10% resets start new "documents"
+            reset = rng.random(B) < 0.02
+            nxt = np.where(reset, BOS, nxt)
+            toks[:, t] = nxt
+            cur = np.where(reset, rng.integers(2, min(self.vocab, 4096), size=B), nxt).astype(np.int32)
+        return {"tokens": toks[:, :-1], "labels": toks[:, 1:].copy()}
+
+    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+        step = 0
+        while True:
+            yield self.batch(step)
+            step += 1
+
+
+class Prefetcher:
+    """Background-thread prefetch with a bounded queue."""
+
+    def __init__(self, it: Iterator, depth: int = 2):
+        self.q: "queue.Queue" = queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
+
+        def run():
+            for item in it:
+                if self._stop.is_set():
+                    return
+                self.q.put(item)
+
+        self.t = threading.Thread(target=run, daemon=True)
+        self.t.start()
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        return self.q.get()
+
+    def close(self):
+        self._stop.set()
+        try:
+            while True:
+                self.q.get_nowait()
+        except queue.Empty:
+            pass

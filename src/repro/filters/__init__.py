@@ -1,0 +1,49 @@
+"""The paper's pipeline filters P1–P7 + utilities."""
+from repro.filters.resample import Resample
+from repro.filters.ortho import Orthorectify, SensorModel, bicubic_sample
+from repro.filters.texture import HaralickTextures, glcm_features_ref, box_sum
+from repro.filters.pansharpen import PansharpenFuse, pansharpen_ref
+from repro.filters.meanshift import MeanShift, meanshift_ref
+from repro.filters.classify import (
+    RandomForestClassify,
+    Forest,
+    Tree,
+    train_forest,
+    forest_predict,
+)
+from repro.filters.pointwise import Convert, BandMath, Concat, ndvi
+from repro.filters.stats import BandStatistics
+from repro.filters.convolution import (
+    SeparableConvolution,
+    SobelGradient,
+    gaussian_kernel,
+    gaussian_smoothing,
+)
+
+__all__ = [
+    "Resample",
+    "Orthorectify",
+    "SensorModel",
+    "bicubic_sample",
+    "HaralickTextures",
+    "glcm_features_ref",
+    "box_sum",
+    "PansharpenFuse",
+    "pansharpen_ref",
+    "MeanShift",
+    "meanshift_ref",
+    "RandomForestClassify",
+    "Forest",
+    "Tree",
+    "train_forest",
+    "forest_predict",
+    "Convert",
+    "BandMath",
+    "Concat",
+    "ndvi",
+    "BandStatistics",
+    "SeparableConvolution",
+    "SobelGradient",
+    "gaussian_kernel",
+    "gaussian_smoothing",
+]

@@ -1,0 +1,52 @@
+"""Pansharpening (paper pipeline P3): fuse PAN + upsampled XS.
+
+Ratio Component Substitution (the OTB BayesianFusion/RCS default):
+
+    out_b = XS↑_b · PAN / smooth(PAN)
+
+where smooth is a box filter whose support matches the XS→PAN resolution
+ratio.  The full P3 graph is ``Resample(XS → PAN grid)`` + this fusion
+filter; see ``repro.pipelines.pansharpening``.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.process_object import Filter, ImageInfo
+from repro.core.region import ImageRegion
+from repro.filters.texture import box_sum
+
+
+def pansharpen_ref(xs_up: jnp.ndarray, pan: jnp.ndarray, radius: int) -> jnp.ndarray:
+    """xs_up: (H, W, B); pan: (H + 2r, W + 2r, 1) pre-padded. → (H, W, B)."""
+    k = 2 * radius + 1
+    smooth = box_sum(pan.astype(jnp.float32), radius) / (k * k)
+    p = pan[radius : pan.shape[0] - radius, radius : pan.shape[1] - radius]
+    ratio = p.astype(jnp.float32) / jnp.maximum(smooth, 1e-6)
+    return xs_up.astype(jnp.float32) * ratio
+
+
+class PansharpenFuse(Filter):
+    n_inputs = 2  # (xs_up, pan)
+    cost_per_pixel = 6.0
+
+    def __init__(self, radius: int = 2, use_pallas: bool = False, name=None):
+        super().__init__(name)
+        self.radius = radius
+        self.use_pallas = use_pallas
+
+    def output_info(self, xs_info: ImageInfo, pan_info: ImageInfo) -> ImageInfo:
+        if (xs_info.rows, xs_info.cols) != (pan_info.rows, pan_info.cols):
+            raise ValueError("xs_up and pan grids must match")
+        return ImageInfo(xs_info.rows, xs_info.cols, xs_info.bands, np.float32, pan_info.geo)
+
+    def requested_region(self, out_region: ImageRegion, xs_info, pan_info):
+        return (out_region, out_region.pad(self.radius))
+
+    def generate(self, out_region: ImageRegion, xs_up, pan) -> jnp.ndarray:
+        if self.use_pallas:
+            from repro.kernels import pansharpen as psk
+
+            return psk.pansharpen(xs_up, pan, self.radius)
+        return pansharpen_ref(xs_up, pan, self.radius)

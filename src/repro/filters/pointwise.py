@@ -1,0 +1,83 @@
+"""Pointwise filters: format conversion (paper pipeline P6), band math, NDVI.
+
+Zero-halo, region-independent by construction.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.process_object import Filter, ImageInfo
+from repro.core.region import ImageRegion
+
+
+class Convert(Filter):
+    """Dtype conversion with linear rescale (paper P6: Jpeg2000 → GeoTiff is,
+    pixel-wise, a decode + re-encode; the pixel transform is the rescale)."""
+
+    cost_per_pixel = 1.0
+
+    def __init__(self, dtype=np.uint8, in_range=(0.0, 4096.0), out_range=None, name=None):
+        super().__init__(name)
+        self.dtype = np.dtype(dtype)
+        self.in_range = in_range
+        if out_range is None:
+            if np.issubdtype(self.dtype, np.integer):
+                ii = np.iinfo(self.dtype)
+                out_range = (float(ii.min), float(ii.max))
+            else:
+                out_range = (0.0, 1.0)
+        self.out_range = out_range
+
+    def output_info(self, info: ImageInfo) -> ImageInfo:
+        return ImageInfo(info.rows, info.cols, info.bands, self.dtype, info.geo)
+
+    def generate(self, out_region: ImageRegion, x: jnp.ndarray) -> jnp.ndarray:
+        (i0, i1), (o0, o1) = self.in_range, self.out_range
+        y = (x.astype(jnp.float32) - i0) / (i1 - i0) * (o1 - o0) + o0
+        y = jnp.clip(y, min(o0, o1), max(o0, o1))
+        return y.astype(self.dtype)
+
+
+class BandMath(Filter):
+    """Apply an arbitrary pointwise function of the band vector."""
+
+    def __init__(self, fn: Callable[[jnp.ndarray], jnp.ndarray], out_bands: int,
+                 out_dtype=np.float32, name=None):
+        super().__init__(name)
+        self.fn = fn
+        self.out_bands = out_bands
+        self.out_dtype = np.dtype(out_dtype)
+
+    def output_info(self, info: ImageInfo) -> ImageInfo:
+        return ImageInfo(info.rows, info.cols, self.out_bands, self.out_dtype, info.geo)
+
+    def generate(self, out_region: ImageRegion, x: jnp.ndarray) -> jnp.ndarray:
+        return self.fn(x.astype(jnp.float32)).astype(self.out_dtype)
+
+
+def ndvi(red_band: int = 0, nir_band: int = 3) -> BandMath:
+    def fn(x):
+        r, n = x[..., red_band], x[..., nir_band]
+        return ((n - r) / jnp.maximum(n + r, 1e-6))[..., None]
+
+    return BandMath(fn, out_bands=1, name="ndvi")
+
+
+class Concat(Filter):
+    """Stack the bands of multiple same-grid inputs."""
+
+    def __init__(self, n_inputs: int, name=None):
+        super().__init__(name)
+        self.n_inputs = n_inputs
+
+    def output_info(self, *infos: ImageInfo) -> ImageInfo:
+        rows, cols = infos[0].rows, infos[0].cols
+        if any((i.rows, i.cols) != (rows, cols) for i in infos):
+            raise ValueError("Concat inputs must share the same grid")
+        return ImageInfo(rows, cols, sum(i.bands for i in infos), np.float32, infos[0].geo)
+
+    def generate(self, out_region: ImageRegion, *xs: jnp.ndarray) -> jnp.ndarray:
+        return jnp.concatenate([x.astype(jnp.float32) for x in xs], axis=-1)

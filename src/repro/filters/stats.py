@@ -1,0 +1,56 @@
+"""Persistent statistics filter (paper §II.C.1's canonical Persistent example).
+
+Accumulates per-band sum / sum² / min / max / count across regions; the
+parallel flavor aggregates with psum/pmax/pmin — the paper's MPI
+many-to-one pattern in ``Synthesis``.  Mask-aware for SPMD row padding.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.process_object import PersistentFilter, Reduction
+from repro.core.region import ImageRegion
+
+
+class BandStatistics(PersistentFilter):
+    supports_mask = True
+    state_reductions = {
+        "sum": Reduction("sum"),
+        "sumsq": Reduction("sum"),
+        "count": Reduction("sum"),
+        "min": Reduction("min"),
+        "max": Reduction("max"),
+    }
+
+    def __init__(self, bands: int, name=None):
+        super().__init__(name)
+        self.bands = bands
+
+    def reset(self):
+        b = self.bands
+        return {
+            "sum": jnp.zeros((b,), jnp.float32),
+            "sumsq": jnp.zeros((b,), jnp.float32),
+            "count": jnp.zeros((), jnp.float32),
+            "min": jnp.full((b,), jnp.inf, jnp.float32),
+            "max": jnp.full((b,), -jnp.inf, jnp.float32),
+        }
+
+    def accumulate(self, st, region: ImageRegion, x, mask=None):
+        x = x.astype(jnp.float32)
+        if mask is None:
+            mask = jnp.ones((x.shape[0], 1, 1), bool)
+        m = jnp.broadcast_to(mask, x.shape)
+        xm = jnp.where(m, x, 0.0)
+        return {
+            "sum": st["sum"] + xm.sum(axis=(0, 1)),
+            "sumsq": st["sumsq"] + (xm * xm).sum(axis=(0, 1)),
+            "count": st["count"] + m[..., 0].sum(),
+            "min": jnp.minimum(st["min"], jnp.where(m, x, jnp.inf).min(axis=(0, 1))),
+            "max": jnp.maximum(st["max"], jnp.where(m, x, -jnp.inf).max(axis=(0, 1))),
+        }
+
+    def synthesize(self, st):
+        mean = st["sum"] / jnp.maximum(st["count"], 1.0)
+        var = st["sumsq"] / jnp.maximum(st["count"], 1.0) - mean * mean
+        return dict(st, mean=mean, std=jnp.sqrt(jnp.maximum(var, 0.0)))

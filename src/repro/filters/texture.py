@@ -1,0 +1,133 @@
+"""Haralick texture extraction (paper pipeline P2).
+
+Gray-Level Co-occurrence Matrix (GLCM) features over a sliding window:
+energy, entropy, contrast, homogeneity, correlation.  The input band is
+quantized to ``levels`` gray levels between (vmin, vmax) — static parameters
+so the filter stays region-independent (paper §II.C.1).
+
+The reference implementation builds the per-pixel GLCM with one-hot pair
+images + cumulative-sum box filters (pure jnp).  The Pallas kernel
+(`repro.kernels.glcm`) computes the same thing tile-by-tile in VMEM without
+the (H, W, Q²) intermediate.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.process_object import Filter, ImageInfo
+from repro.core.region import ImageRegion
+
+FEATURES = ("energy", "entropy", "contrast", "homogeneity", "correlation")
+
+
+def quantize(x: jnp.ndarray, vmin: float, vmax: float, levels: int) -> jnp.ndarray:
+    q = jnp.floor((x - vmin) / max(1e-12, (vmax - vmin)) * levels)
+    return jnp.clip(q, 0, levels - 1).astype(jnp.int32)
+
+
+def box_sum(x: jnp.ndarray, radius: int) -> jnp.ndarray:
+    """Sum over (2r+1)² windows; input must be pre-padded by r on rows/cols."""
+    k = 2 * radius + 1
+    c = jnp.cumsum(x, axis=0)
+    c = jnp.concatenate([c[k - 1 : k], c[k:] - c[:-k]], axis=0)
+    c = jnp.cumsum(c, axis=1)
+    return jnp.concatenate([c[:, k - 1 : k], c[:, k:] - c[:, :-k]], axis=1)
+
+
+def glcm_features_ref(
+    x: jnp.ndarray,
+    radius: int,
+    offset: tuple,
+    levels: int,
+    vmin: float,
+    vmax: float,
+) -> jnp.ndarray:
+    """Oracle: x is (H + 2*halo, W + 2*halo) single band, halo = radius +
+    max(|offset|); returns (H, W, 5) features."""
+    dr, dc = offset
+    m = max(abs(dr), abs(dc))
+    q = quantize(x, vmin, vmax, levels)
+    H2, W2 = q.shape
+    # pair images: q1 at (r, c), q2 at (r+dr, c+dc); valid domain shrinks by m
+    q1 = q[m : H2 - m, m : W2 - m]
+    q2 = q[m + dr : H2 - m + dr, m + dc : W2 - m + dc]
+    oh1 = jnp.eye(levels, dtype=jnp.float32)[q1]
+    oh2 = jnp.eye(levels, dtype=jnp.float32)[q2]
+    # co-occurrence per pixel = box-sum of the outer product channel images
+    pair = oh1[..., :, None] * oh2[..., None, :]  # (h, w, Q, Q)
+    hw = pair.shape[:2]
+    glcm = box_sum(pair.reshape(hw + (levels * levels,)), radius)  # (H, W, Q²)
+    glcm = glcm.reshape(glcm.shape[:2] + (levels, levels))
+    return features_from_glcm(glcm)
+
+
+def features_from_glcm(glcm: jnp.ndarray) -> jnp.ndarray:
+    """(..., Q, Q) counts → (..., 5) Haralick features."""
+    levels = glcm.shape[-1]
+    total = jnp.maximum(glcm.sum(axis=(-2, -1), keepdims=True), 1e-12)
+    p = glcm / total
+    i = jnp.arange(levels, dtype=jnp.float32)
+    ii = i[:, None]
+    jj = i[None, :]
+    energy = (p * p).sum(axis=(-2, -1))
+    entropy = -(p * jnp.log(p + 1e-12)).sum(axis=(-2, -1))
+    contrast = (p * (ii - jj) ** 2).sum(axis=(-2, -1))
+    homogeneity = (p / (1.0 + (ii - jj) ** 2)).sum(axis=(-2, -1))
+    mu_i = (p * ii).sum(axis=(-2, -1))
+    mu_j = (p * jj).sum(axis=(-2, -1))
+    var_i = (p * (ii - mu_i[..., None, None]) ** 2).sum(axis=(-2, -1))
+    var_j = (p * (jj - mu_j[..., None, None]) ** 2).sum(axis=(-2, -1))
+    cov = (p * ii * jj).sum(axis=(-2, -1)) - mu_i * mu_j
+    # constant windows have var≈0 (up to box-filter rounding): define corr=0
+    # there, and keep the denominator well clear of float noise
+    denom2 = var_i * var_j
+    corr = jnp.where(
+        denom2 < 1e-4, 0.0, cov / jnp.sqrt(jnp.maximum(denom2, 1e-4))
+    )
+    return jnp.stack([energy, entropy, contrast, homogeneity, corr], axis=-1)
+
+
+class HaralickTextures(Filter):
+    """5-band Haralick features from the first band of the input."""
+
+    cost_per_pixel = 64.0
+
+    def __init__(
+        self,
+        radius: int = 2,
+        offset: tuple = (0, 1),
+        levels: int = 8,
+        vmin: float = 0.0,
+        vmax: float = 4096.0,
+        use_pallas: bool = False,
+        name=None,
+    ):
+        super().__init__(name)
+        self.radius = radius
+        self.offset = offset
+        self.levels = levels
+        self.vmin, self.vmax = vmin, vmax
+        self.use_pallas = use_pallas
+
+    @property
+    def halo(self) -> int:
+        return self.radius + max(abs(self.offset[0]), abs(self.offset[1]))
+
+    def output_info(self, info: ImageInfo) -> ImageInfo:
+        return ImageInfo(info.rows, info.cols, len(FEATURES), np.float32, info.geo)
+
+    def requested_region(self, out_region: ImageRegion, info: ImageInfo):
+        return (out_region.pad(self.halo),)
+
+    def generate(self, out_region: ImageRegion, x: jnp.ndarray) -> jnp.ndarray:
+        band = x[..., 0].astype(jnp.float32)
+        if self.use_pallas:
+            from repro.kernels import glcm as glcm_kernel
+
+            return glcm_kernel.glcm_features(
+                band, self.radius, self.offset, self.levels, self.vmin, self.vmax
+            )
+        return glcm_features_ref(
+            band, self.radius, self.offset, self.levels, self.vmin, self.vmax
+        )

@@ -1,0 +1,23 @@
+"""Pallas TPU kernels for the compute hot-spots + refs + dispatch wrappers.
+
+Kernels (each: <name>.py with pl.pallas_call + BlockSpec; oracle in ref.py;
+jit'd dispatch in ops.py):
+  glcm            — per-pixel GLCM Haralick features (paper P2)
+  pansharpen      — fused RCS pansharpening (paper P3)
+  meanshift       — mode-search filtering (paper P5)
+  flash_attention — causal online-softmax attention (LM serving/training)
+  ssd_scan        — mamba2 SSD intra-chunk block
+"""
+from repro.kernels import glcm, pansharpen, meanshift, flash_attention, ssd_scan
+from repro.kernels import ops, ref, util
+
+__all__ = [
+    "glcm",
+    "pansharpen",
+    "meanshift",
+    "flash_attention",
+    "ssd_scan",
+    "ops",
+    "ref",
+    "util",
+]

@@ -1,0 +1,91 @@
+"""Pallas TPU kernel: causal flash attention (serving/training hot spot).
+
+Online-softmax attention with explicit VMEM blocking: grid over
+(batch·heads, q-blocks); the kv stream is walked in ``block_k`` slices of
+the VMEM-resident (S, D) ref with running max/denominator in f32.  Block
+sizes are MXU-aligned (q=128, k=128 default; D is the lane dim).
+
+This kernel validates the *algorithm* used by the pure-jnp
+``models.layers.blockwise_attention`` (the production path XLA partitions
+across the mesh); on TPU the kernel replaces the inner per-device
+computation.  Oracle: ``kernels.ref.attention_ref``.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.util import interpret_default
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, block_k, causal, sq, skv, scale):
+    iq = pl.program_id(1)
+    q = q_ref[0].astype(jnp.float32) * scale  # (bq, D)
+    bq, D = q.shape
+    nk = skv // block_k
+
+    m = jnp.full((bq,), -jnp.inf, jnp.float32)
+    l = jnp.zeros((bq,), jnp.float32)
+    acc = jnp.zeros((bq, D), jnp.float32)
+    q_pos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, 1), 0)[:, 0]
+
+    for j in range(nk):  # static loop → fully pipelined on TPU
+        k = k_ref[0, pl.dslice(j * block_k, block_k)].astype(jnp.float32)
+        v = v_ref[0, pl.dslice(j * block_k, block_k)].astype(jnp.float32)
+        s = q @ k.T  # (bq, bk)
+        if causal:
+            k_pos = j * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, (1, block_k), 1
+            )
+            s = jnp.where(k_pos <= q_pos[:, None], s, -1e30)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + p.sum(axis=-1)
+        acc = acc * corr[:, None] + p @ v
+        m = m_new
+    o_ref[0] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "block_q", "block_k", "interpret")
+)
+def flash_attention(
+    q: jnp.ndarray,  # (BH, Sq, D)
+    k: jnp.ndarray,  # (BH, Skv, D)
+    v: jnp.ndarray,
+    causal: bool = True,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    if interpret is None:
+        interpret = interpret_default()
+    BH, Sq, D = q.shape
+    Skv = k.shape[1]
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Skv)
+    assert Sq % block_q == 0 and Skv % block_k == 0, (Sq, Skv, block_q, block_k)
+    nq = Sq // block_q
+    kernel = functools.partial(
+        _flash_kernel, block_k=block_k, causal=causal, sq=Sq, skv=Skv,
+        scale=1.0 / math.sqrt(D),
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(BH, nq),
+        in_specs=[
+            pl.BlockSpec((1, block_q, D), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, Skv, D), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, Skv, D), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, D), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Sq, D), q.dtype),
+        interpret=interpret,
+        name="flash_attention",
+    )(q, k, v)

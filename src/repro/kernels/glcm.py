@@ -1,0 +1,127 @@
+"""Pallas TPU kernel: per-pixel GLCM Haralick features (paper pipeline P2).
+
+Hardware adaptation (GPU→TPU): per-window co-occurrence histograms are
+scatter workloads on GPU (atomics into shared-memory bins).  TPUs have no
+fast scatter, so the histogram is rebuilt as *vectorized one-hot
+accumulation*: for each of the (2R+1)² window offsets, the pair code
+``q1·Q + q2`` is compared against a static iota over the Q² bins and added
+into a VMEM accumulator — pure VPU work with perfectly regular access, no
+atomics, no gather.  Features then come from static per-bin weight vectors
+(VPU reductions over the bin axis).
+
+Grid: one program per (tile_r, tile_c) output tile; inputs are pre-tiled
+with halos host-side (`kernels.util.extract_patches`), so every block is a
+self-contained VMEM working set:
+
+    q tile    (T + 2·halo)²·4B     e.g. (128+8)²·4 ≈ 74 KB
+    acc       T²·Q²·4B             128²·64·4 = 4 MB  (Q=8)  « 128 MB VMEM
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.kernels.util import (
+    extract_patches,
+    interpret_default,
+    pad_to_multiple,
+    stitch_patches,
+)
+
+
+def _glcm_kernel(q_ref, out_ref, *, radius, offset, levels, tile):
+    th, tw = tile
+    dr, dc = offset
+    m = max(abs(dr), abs(dc))
+    halo = radius + m
+    q = q_ref[0]  # (th + 2·halo, tw + 2·halo) int32
+
+    nbins = levels * levels
+    acc = jnp.zeros((th, tw, nbins), jnp.float32)
+    iota = jax.lax.broadcasted_iota(jnp.int32, (1, 1, nbins), 2)
+    # window loop is static: (2R+1)² one-hot accumulations
+    for u in range(-radius, radius + 1):
+        for v in range(-radius, radius + 1):
+            q1 = jax.lax.dynamic_slice(q, (halo + u, halo + v), (th, tw))
+            q2 = jax.lax.dynamic_slice(q, (halo + u + dr, halo + v + dc), (th, tw))
+            code = (q1 * levels + q2)[:, :, None]
+            acc = acc + (code == iota).astype(jnp.float32)
+
+    # Haralick features from static bin-weight vectors
+    i = jnp.arange(levels, dtype=jnp.float32)
+    ii = jnp.repeat(i, levels)  # bin → row level
+    jj = jnp.tile(i, levels)  # bin → col level
+    total = jnp.maximum(acc.sum(-1, keepdims=True), 1e-12)
+    p = acc / total
+    energy = (p * p).sum(-1)
+    entropy = -(p * jnp.log(p + 1e-12)).sum(-1)
+    contrast = (p * ((ii - jj) ** 2)).sum(-1)
+    homog = (p / (1.0 + (ii - jj) ** 2)).sum(-1)
+    mu_i = (p * ii).sum(-1)
+    mu_j = (p * jj).sum(-1)
+    var_i = (p * ii * ii).sum(-1) - mu_i * mu_i
+    var_j = (p * jj * jj).sum(-1) - mu_j * mu_j
+    cov = (p * ii * jj).sum(-1) - mu_i * mu_j
+    denom2 = var_i * var_j
+    corr = jnp.where(denom2 < 1e-4, 0.0, cov / jnp.sqrt(jnp.maximum(denom2, 1e-4)))
+    out_ref[0] = jnp.stack([energy, entropy, contrast, homog, corr], axis=-1)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("radius", "offset", "levels", "vmin", "vmax", "tile", "interpret"),
+)
+def glcm_features(
+    band: jnp.ndarray,
+    radius: int = 2,
+    offset: Tuple[int, int] = (0, 1),
+    levels: int = 8,
+    vmin: float = 0.0,
+    vmax: float = 4096.0,
+    tile: Tuple[int, int] = (128, 128),
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """band: (H + 2·halo, W + 2·halo) float — pre-padded by halo = radius +
+    max|offset| (the filter's requested region).  Returns (H, W, 5)."""
+    if interpret is None:
+        interpret = interpret_default()
+    dr, dc = offset
+    halo = radius + max(abs(dr), abs(dc))
+    H, W = band.shape[0] - 2 * halo, band.shape[1] - 2 * halo
+    q = jnp.clip(
+        jnp.floor((band.astype(jnp.float32) - vmin) / max(1e-12, vmax - vmin) * levels),
+        0,
+        levels - 1,
+    ).astype(jnp.int32)
+    # tile the padded image; edge-pad ragged tiles (cropped after)
+    th = min(tile[0], max(8, H))
+    tw = min(tile[1], max(8, W))
+    Hp = -(-H // th) * th
+    Wp = -(-W // tw) * tw
+    qfull = jnp.pad(q, [(0, Hp - H), (0, Wp - W)], mode="edge")
+    patches = extract_patches(qfull, (th, tw), halo)  # (ntr, ntc, th+2h, tw+2h)
+    ntr, ntc = patches.shape[:2]
+    patches = patches.reshape(ntr * ntc, th + 2 * halo, tw + 2 * halo)
+
+    kernel = functools.partial(
+        _glcm_kernel, radius=radius, offset=offset, levels=levels, tile=(th, tw)
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(ntr * ntc,),
+        in_specs=[
+            pl.BlockSpec(
+                (1, th + 2 * halo, tw + 2 * halo), lambda i: (i, 0, 0)
+            )
+        ],
+        out_specs=pl.BlockSpec((1, th, tw, 5), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((ntr * ntc, th, tw, 5), jnp.float32),
+        interpret=interpret,
+        name="glcm_haralick",
+    )(patches)
+    return stitch_patches(out.reshape(ntr, ntc, th, tw, 5), H, W)

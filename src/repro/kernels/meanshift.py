@@ -1,0 +1,77 @@
+"""Pallas TPU kernel: mean-shift mode-search filtering (paper pipeline P5).
+
+The jnp reference materializes all (2hs+1)² shifted windows — a K× HBM blow-
+up (hs=3 → 49×).  The kernel keeps only the running numerator/denominator in
+VMEM and re-slices the haloed tile per offset, so HBM traffic is O(1) per
+pixel per iteration instead of O(K).  All iterations run on one resident
+tile — arithmetic intensity scales with n_iter·K while bytes stay constant,
+pushing the op from memory-bound to compute-bound on TPU.
+
+VMEM per tile (T=128, hs=3, B=4): x (134)²·4·4 ≈ 287 KB + 3 tile buffers.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.util import extract_patches, interpret_default, stitch_patches
+
+
+def _ms_kernel(x_ref, out_ref, *, hs, hr, n_iter, tile):
+    th, tw = tile
+    x = x_ref[0].astype(jnp.float32)  # (th+2hs, tw+2hs, B)
+    B = x.shape[-1]
+    v = jax.lax.dynamic_slice(x, (hs, hs, 0), (th, tw, B))
+    hr2 = hr * hr
+    for _ in range(n_iter):
+        num = jnp.zeros((th, tw, B), jnp.float32)
+        den = jnp.zeros((th, tw, 1), jnp.float32)
+        for u in range(2 * hs + 1):
+            for w_ in range(2 * hs + 1):
+                xw = jax.lax.dynamic_slice(x, (u, w_, 0), (th, tw, B))
+                d2 = ((xw - v) ** 2).sum(-1, keepdims=True)
+                m = (d2 <= hr2).astype(jnp.float32)
+                num = num + xw * m
+                den = den + m
+        v = num / jnp.maximum(den, 1e-12)
+    out_ref[0] = v
+
+
+@functools.partial(jax.jit, static_argnames=("hs", "hr", "n_iter", "tile", "interpret"))
+def meanshift(
+    x: jnp.ndarray,
+    hs: int = 3,
+    hr: float = 100.0,
+    n_iter: int = 4,
+    tile: Tuple[int, int] = (128, 128),
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """x: (H + 2hs, W + 2hs, B) pre-padded → (H, W, B)."""
+    if interpret is None:
+        interpret = interpret_default()
+    H, W, B = x.shape[0] - 2 * hs, x.shape[1] - 2 * hs, x.shape[2]
+    th = min(tile[0], max(8, H))
+    tw = min(tile[1], max(8, W))
+    Hp, Wp = -(-H // th) * th, -(-W // tw) * tw
+    xp = jnp.pad(x, [(0, Hp - H), (0, Wp - W), (0, 0)], mode="edge")
+    tiles = extract_patches(xp, (th, tw), hs)
+    ntr, ntc = tiles.shape[:2]
+    tiles = tiles.reshape(ntr * ntc, th + 2 * hs, tw + 2 * hs, B)
+
+    kernel = functools.partial(_ms_kernel, hs=hs, hr=hr, n_iter=n_iter, tile=(th, tw))
+    out = pl.pallas_call(
+        kernel,
+        grid=(ntr * ntc,),
+        in_specs=[
+            pl.BlockSpec((1, th + 2 * hs, tw + 2 * hs, B), lambda i: (i, 0, 0, 0))
+        ],
+        out_specs=pl.BlockSpec((1, th, tw, B), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((ntr * ntc, th, tw, B), jnp.float32),
+        interpret=interpret,
+        name="meanshift_mode_search",
+    )(tiles)
+    return stitch_patches(out.reshape(ntr, ntc, th, tw, B), H, W)

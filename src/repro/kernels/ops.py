@@ -1,0 +1,53 @@
+"""Jit'd dispatch wrappers: Pallas kernel on TPU, pure-jnp oracle otherwise
+(or force with ``use_pallas=True`` → interpret mode on CPU)."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import glcm as _glcm
+from repro.kernels import meanshift as _ms
+from repro.kernels import pansharpen as _ps
+from repro.kernels import ssd_scan as _ssd
+from repro.kernels import ref as _ref
+from repro.kernels.util import interpret_default
+
+
+def _use_pallas(flag: Optional[bool]) -> bool:
+    if flag is not None:
+        return flag
+    return jax.default_backend() == "tpu"
+
+
+def glcm_features(band, radius=2, offset=(0, 1), levels=8, vmin=0.0,
+                  vmax=4096.0, use_pallas: Optional[bool] = None, **kw):
+    if _use_pallas(use_pallas):
+        return _glcm.glcm_features(band, radius, offset, levels, vmin, vmax, **kw)
+    return _ref.glcm_features_ref(band, radius, offset, levels, vmin, vmax)
+
+
+def pansharpen(xs_up, pan, radius=2, use_pallas: Optional[bool] = None, **kw):
+    if _use_pallas(use_pallas):
+        return _ps.pansharpen(xs_up, pan, radius, **kw)
+    return _ref.pansharpen_ref(xs_up, pan, radius)
+
+
+def meanshift(x, hs=3, hr=100.0, n_iter=4, use_pallas: Optional[bool] = None, **kw):
+    if _use_pallas(use_pallas):
+        return _ms.meanshift(x, hs, hr, n_iter, **kw)
+    return _ref.meanshift_ref(x, hs, hr, n_iter)
+
+
+def flash_attention(q, k, v, causal=True, use_pallas: Optional[bool] = None, **kw):
+    if _use_pallas(use_pallas):
+        return _fa.flash_attention(q, k, v, causal, **kw)
+    return _ref.attention_ref(q, k, v, causal)
+
+
+def ssd_intra_chunk(x, dt, cum, B, C, use_pallas: Optional[bool] = None, **kw):
+    if _use_pallas(use_pallas):
+        return _ssd.ssd_intra_chunk(x, dt, cum, B, C, **kw)
+    return _ref.ssd_intra_ref(x, dt, cum, B, C)

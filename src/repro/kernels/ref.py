@@ -1,0 +1,45 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets).
+
+Geospatial kernels reuse the filter reference implementations (they ARE the
+pipeline semantics); LM kernels get standalone oracles here.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+# geospatial oracles (canonical definitions live with the filters)
+from repro.filters.texture import glcm_features_ref  # noqa: F401
+from repro.filters.pansharpen import pansharpen_ref  # noqa: F401
+from repro.filters.meanshift import meanshift_ref  # noqa: F401
+
+
+def attention_ref(q, k, v, causal: bool = True) -> jnp.ndarray:
+    """(BH, Sq, D) × (BH, Skv, D) — plain masked softmax attention."""
+    D = q.shape[-1]
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s / math.sqrt(D)
+    if causal:
+        Sq, Skv = q.shape[1], k.shape[1]
+        qp = jnp.arange(Sq)[:, None]
+        kp = jnp.arange(Skv)[None, :]
+        s = jnp.where(kp <= qp, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def ssd_intra_ref(x, dt, cum, B, C):
+    """Chunk-local SSD (no incoming state): oracle for ssd_intra_chunk.
+    x (BHC,L,P), dt/cum (BHC,L), B/C (BHC,L,N)."""
+    xf = x.astype(jnp.float32)
+    cb = jnp.einsum("cln,cmn->clm", C.astype(jnp.float32), B.astype(jnp.float32))
+    decay = jnp.exp(cum[:, :, None] - cum[:, None, :])
+    L = x.shape[1]
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    w = jnp.where(mask[None], cb * decay, 0.0) * dt[:, None, :]
+    y = jnp.einsum("clm,cmp->clp", w, xf)
+    w_state = jnp.exp(cum[:, -1:] - cum) * dt  # (BHC, L)
+    states = jnp.einsum("cln,clp->cnp", B.astype(jnp.float32) * w_state[..., None], xf)
+    return y.astype(x.dtype), states

@@ -1,0 +1,81 @@
+"""Pallas TPU kernel: SSD intra-chunk block (mamba2 hot spot).
+
+One grid cell = one (batch·head, chunk): computes the chunk-local output
+
+    Y[i] = Σ_{j≤i} (C_i·B_j) · exp(cum_i − cum_j) · Δt_j · X[j]
+
+and the chunk state contribution  S_c = Σ_j exp(cum_L − cum_j)·Δt_j·B_j⊗X_j
+— both are (L×N)@(N×L)-shaped matmuls on the MXU with a decay-weighted
+triangular mask, exactly the SSD "duality" form.  The inter-chunk state
+recurrence (tiny, O(nc·N·P)) stays in jnp (`models.ssm.ssd_chunked`).
+
+VMEM per cell (L=256, N=128, P=64): X 64 KB, B/C 128 KB, scores 256 KB.
+Oracle: ``kernels.ref.ssd_intra_ref``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.util import interpret_default
+
+
+def _ssd_kernel(x_ref, dt_ref, cum_ref, b_ref, c_ref, y_ref, s_ref):
+    x = x_ref[0].astype(jnp.float32)  # (L, P)
+    dt = dt_ref[0].astype(jnp.float32)  # (L,)
+    cum = cum_ref[0].astype(jnp.float32)  # (L,) inclusive cumulative log-decay
+    B = b_ref[0].astype(jnp.float32)  # (L, N)
+    C = c_ref[0].astype(jnp.float32)  # (L, N)
+    L = x.shape[0]
+
+    cb = C @ B.T  # (L, L) MXU
+    decay = jnp.exp(cum[:, None] - cum[None, :])
+    ii = jax.lax.broadcasted_iota(jnp.int32, (L, L), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (L, L), 1)
+    w = jnp.where(jj <= ii, cb * decay, 0.0) * dt[None, :]
+    y_ref[0] = (w @ x).astype(y_ref.dtype)  # (L, P) MXU
+
+    # chunk state: S_c = (B ⊙ exp(cum_L − cum)·Δt)ᵀ @ X   → (N, P)
+    w_state = jnp.exp(cum[-1] - cum) * dt  # (L,)
+    s_ref[0] = ((B * w_state[:, None]).T @ x).astype(s_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_intra_chunk(
+    x: jnp.ndarray,  # (BHC, L, P)  batch·head·chunk cells
+    dt: jnp.ndarray,  # (BHC, L)
+    cum: jnp.ndarray,  # (BHC, L)
+    B: jnp.ndarray,  # (BHC, L, N)
+    C: jnp.ndarray,  # (BHC, L, N)
+    interpret: Optional[bool] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (y_intra (BHC, L, P), chunk_states (BHC, N, P))."""
+    if interpret is None:
+        interpret = interpret_default()
+    BHC, L, P = x.shape
+    N = B.shape[-1]
+    return pl.pallas_call(
+        _ssd_kernel,
+        grid=(BHC,),
+        in_specs=[
+            pl.BlockSpec((1, L, P), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, L), lambda i: (i, 0)),
+            pl.BlockSpec((1, L), lambda i: (i, 0)),
+            pl.BlockSpec((1, L, N), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, L, N), lambda i: (i, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, L, P), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, N, P), lambda i: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BHC, L, P), x.dtype),
+            jax.ShapeDtypeStruct((BHC, N, P), jnp.float32),
+        ],
+        interpret=interpret,
+        name="ssd_intra_chunk",
+    )(x, dt, cum, B, C)

@@ -1,0 +1,67 @@
+"""Shared kernel utilities: host-side tiling with halos, interpret-mode
+auto-detection.
+
+TPU Pallas BlockSpecs address non-overlapping blocks; windowed kernels need
+overlapping (haloed) tiles.  ``extract_patches`` materializes the overlap
+host-side — a (1 + 2·halo/tile)² footprint — so each grid step streams one
+self-contained VMEM tile.  This trades a little HBM bandwidth for fully
+static, MXU-aligned VMEM tiling, which is the TPU-idiomatic port of the
+paper's "splitting strategy chosen from the memory specification" (§II.B/D):
+the splitter-level planning reappears one level down the memory hierarchy.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def interpret_default() -> bool:
+    """Pallas interpret mode on CPU hosts (the validation path); compiled on TPU."""
+    return jax.default_backend() != "tpu"
+
+
+def pad_to_multiple(x: jnp.ndarray, mult_r: int, mult_c: int, mode: str = "edge"):
+    """Pad rows/cols (leading two axes) up to multiples; returns (padded, r, c)."""
+    r = (-x.shape[0]) % mult_r
+    c = (-x.shape[1]) % mult_c
+    if r or c:
+        x = jnp.pad(x, [(0, r), (0, c)] + [(0, 0)] * (x.ndim - 2), mode=mode)
+    return x, r, c
+
+
+def extract_patches(x: jnp.ndarray, tile: Tuple[int, int], halo: int) -> jnp.ndarray:
+    """x: (H + 2·halo, W + 2·halo, ...) pre-padded → patches
+    (nt_r, nt_c, tile+2·halo, tile+2·halo, ...); H, W must divide by tile."""
+    th, tw = tile
+    H = x.shape[0] - 2 * halo
+    W = x.shape[1] - 2 * halo
+    assert H % th == 0 and W % tw == 0, (x.shape, tile, halo)
+    nt_r, nt_c = H // th, W // tw
+    rows = [
+        jnp.stack(
+            [
+                lax_slice(x, i * th, j * tw, th + 2 * halo, tw + 2 * halo)
+                for j in range(nt_c)
+            ],
+            axis=0,
+        )
+        for i in range(nt_r)
+    ]
+    return jnp.stack(rows, axis=0)
+
+
+def lax_slice(x, r0, c0, h, w):
+    return jax.lax.dynamic_slice(
+        x, (r0, c0) + (0,) * (x.ndim - 2), (h, w) + x.shape[2:]
+    )
+
+
+def stitch_patches(p: jnp.ndarray, out_rows: int, out_cols: int) -> jnp.ndarray:
+    """(nt_r, nt_c, th, tw, ...) → (rows, cols, ...), cropped."""
+    nt_r, nt_c, th, tw = p.shape[:4]
+    y = jnp.moveaxis(p, 2, 1).reshape((nt_r * th, nt_c * tw) + p.shape[4:])
+    return y[:out_rows, :out_cols]

@@ -1,0 +1,4 @@
+"""Launchers: production meshes, multi-pod dry-run, training, hillclimb."""
+from repro.launch.mesh import HW, make_host_mesh, make_production_mesh
+
+__all__ = ["HW", "make_host_mesh", "make_production_mesh"]

@@ -1,0 +1,139 @@
+"""Compiled-artifact analysis: collective bytes, roofline terms.
+
+The three-term roofline (per device):
+
+    compute    = HLO_FLOPs / peak_FLOP/s
+    memory     = HLO_bytes / HBM_bw
+    collective = Σ collective result bytes / ICI link bw
+
+``cost_analysis()`` supplies FLOPs/bytes; collective bytes are parsed from
+the post-SPMD HLO text (``compiled.as_text()``) by summing the result-shape
+bytes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute op (cross-pod ops are attributed to the pod axis by their
+replica-group span when available).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLL_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+             "collective-permute")
+
+# result shape(s) then op name: `%x = bf16[1,2]{1,0} all-gather(...)` or
+# tuple results `%x = (f32[2]{0}, f32[2]{0}) all-reduce(...)`
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_LINE_RE = re.compile(
+    r"=\s*(\([^)]*\)|\w+\[[^\]]*\](?:\{[^}]*\})?)\s*"
+    r"(all-gather-start|all-gather|all-reduce-start|all-reduce|"
+    r"reduce-scatter|all-to-all|collective-permute-start|collective-permute)\("
+)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+_UPCAST_RE = re.compile(
+    r"%(wrapped_convert[\w.]*) = f32\[([\d,]+)\]\S*\s*fusion\(%(?:param|arg|p)[\w.]*\)"
+)
+
+
+def cpu_bf16_upcast_bytes(hlo_text: str, min_bytes: int = 1 << 26) -> int:
+    """CPU-backend artifact: XLA CPU has no native bf16 compute, so it
+    materializes f32 converts of bf16 *parameters* (e.g. a full f32 copy of a
+    decode KV cache).  TPU reads bf16 natively — these buffers don't exist on
+    the target hardware, so the memory report subtracts them (both raw and
+    adjusted numbers are recorded).  Only top-level ``wrapped_convert``
+    fusions are counted (one per allocation); the inner `convert` ops of
+    their bodies and in-loop copies alias the same buffer."""
+    total = 0
+    seen = set()
+    for m in _UPCAST_RE.finditer(hlo_text):
+        name, dims = m.groups()
+        if name in seen:
+            continue
+        seen.add(name)
+        n = 1
+        for d in dims.split(","):
+            n *= int(d)
+        b = n * 4
+        if b >= min_bytes:
+            total += b  # the f32 copy simply would not exist on TPU
+    return total
+
+
+def parse_collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum result bytes per collective op kind."""
+    out: Dict[str, int] = {k: 0 for k in _COLL_OPS}
+    for m in _LINE_RE.finditer(hlo_text):
+        shape_str, op = m.group(1), m.group(2)
+        op = op.replace("-start", "")
+        out[op] = out.get(op, 0) + _shape_bytes(shape_str)
+    out["total"] = sum(out[k] for k in _COLL_OPS)
+    return out
+
+
+def roofline_terms(
+    flops_per_device: float,
+    bytes_per_device: float,
+    collective_bytes_per_device: float,
+    hw: Dict[str, float],
+) -> Dict[str, float]:
+    compute_s = flops_per_device / hw["peak_flops"]
+    memory_s = bytes_per_device / hw["hbm_bw"]
+    collective_s = collective_bytes_per_device / hw["ici_bw"]
+    terms = {
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+    }
+    dominant = max(terms, key=terms.get)
+    bound = max(compute_s, memory_s, collective_s)
+    terms.update(
+        dominant=dominant,
+        step_time_lower_bound_s=bound,
+        roofline_fraction=compute_s / bound if bound > 0 else 0.0,
+    )
+    return terms
+
+
+def analyze_compiled(compiled, n_devices: int) -> Dict:
+    """Extract per-device memory / cost / collective stats."""
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    text = compiled.as_text()
+    colls = parse_collective_bytes(text)
+    return {
+        "memory": {
+            "argument_bytes": int(getattr(ma, "argument_size_in_bytes", 0)),
+            "output_bytes": int(getattr(ma, "output_size_in_bytes", 0)),
+            "temp_bytes": int(getattr(ma, "temp_size_in_bytes", 0)),
+            "alias_bytes": int(getattr(ma, "alias_size_in_bytes", 0)),
+            "cpu_bf16_upcast_bytes": cpu_bf16_upcast_bytes(text),
+        },
+        "cost": {
+            "flops": float(ca.get("flops", 0.0)),
+            "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+            "transcendentals": float(ca.get("transcendentals", 0.0)),
+        },
+        "collectives": colls,
+        "n_devices": n_devices,
+    }

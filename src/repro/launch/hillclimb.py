@@ -1,0 +1,95 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Perf-iteration driver: lower one cell with config/sharding overrides and
+report the three roofline terms (§Perf methodology: hypothesis → change →
+re-lower → re-analyse).
+
+    PYTHONPATH=src python -m repro.launch.hillclimb --arch gemma3-12b \
+        --shape train_4k --set remat=dots --set train_microbatches=2
+"""
+import argparse
+import dataclasses
+import json
+
+from repro.configs import SHAPES, get_config
+from repro.launch import dryrun as DR
+from repro.launch.analysis import analyze_compiled, roofline_terms
+from repro.launch.mesh import HW
+
+
+def measure(arch: str, shape: str, overrides=None, remat: str = "nothing",
+            multi_pod: bool = False, label: str = "baseline"):
+    cfg = get_config(arch)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    n_layers = cfg.n_layers
+
+    compiled, n_dev, _ = DR.lower_cell(arch, shape, multi_pod, remat, cfg=cfg)
+    stats = analyze_compiled(compiled, n_dev)
+    mem = stats["memory"]
+    per_dev = (mem["argument_bytes"] + mem["output_bytes"] + mem["temp_bytes"]
+               - mem["alias_bytes"] - mem["cpu_bf16_upcast_bytes"])
+    del compiled
+
+    corr_cost, corr_coll = DR.loop_corrected_stats(
+        arch, shape, multi_pod, remat, n_layers,
+        variant=lambda c, nl: dataclasses.replace(
+            DR.analysis_variant(c, nl), **(overrides or {}),
+            n_layers=nl, scan_unroll=1 << 30,
+        ),
+    )
+    bytes_cost, _ = DR.loop_corrected_stats(
+        arch, shape, multi_pod, remat, n_layers,
+        variant=lambda c, nl: dataclasses.replace(
+            DR.bytes_variant(c, nl), **(overrides or {}),
+            n_layers=nl, scan_unroll=1 << 30,
+        ),
+    )
+    terms = roofline_terms(
+        corr_cost["flops"], bytes_cost["bytes_accessed"],
+        corr_coll["total"], HW,
+    )
+    rec = {
+        "label": label,
+        "arch": arch,
+        "shape": shape,
+        "overrides": {k: str(v) for k, v in (overrides or {}).items()},
+        "remat": remat,
+        **{k: (round(v, 5) if isinstance(v, float) else v) for k, v in terms.items()},
+        "collectives_by_op": {k: int(v) for k, v in corr_coll.items()},
+        "hbm_frac": per_dev / HW["hbm_bytes"],
+    }
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--set", action="append", default=[],
+                    help="cfg override key=value (int/float parsed)")
+    ap.add_argument("--remat", default="nothing")
+    ap.add_argument("--label", default="iteration")
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        try:
+            v = int(v)
+        except ValueError:
+            try:
+                v = float(v)
+            except ValueError:
+                pass
+        overrides[k] = v
+
+    rec = measure(args.arch, args.shape, overrides, args.remat,
+                  args.multi_pod, args.label)
+    print(json.dumps(rec, indent=1))
+
+
+if __name__ == "__main__":
+    main()

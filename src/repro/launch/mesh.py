@@ -1,0 +1,30 @@
+"""Production meshes.
+
+A function (not a module-level constant) so importing never touches jax
+device state.  Hardware model: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI (used by benchmarks/roofline.py).
+"""
+from __future__ import annotations
+
+import jax
+
+HW = {
+    "peak_flops": 197e12,  # bf16 per chip
+    "hbm_bw": 819e9,  # bytes/s
+    "ici_bw": 50e9,  # bytes/s per link
+    "hbm_bytes": 16 * 2**30,
+}
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small mesh over the actual local devices (tests/examples)."""
+    n = len(jax.devices())
+    if data * model > n:
+        data, model = n, 1
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,4 @@
+"""LM model zoo: layers, SSD, MoE, and the config-driven model."""
+from repro.models import layers, ssm, moe, lm, inputs
+
+__all__ = ["layers", "ssm", "moe", "lm", "inputs"]

@@ -1,0 +1,99 @@
+"""Input specs per (architecture × shape): ShapeDtypeStructs for the dry-run
+(no allocation) and synthetic batches for smoke tests / examples.
+
+Modality frontends are STUBS per the assignment: ``[vlm]`` receives
+precomputed patch embeddings, ``[audio]`` precomputed frame embeddings —
+``input_specs`` reflects that contract.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+
+def _split_vlm_seq(cfg: ModelConfig, seq: int) -> Tuple[int, int]:
+    f = min(cfg.frontend_tokens, seq // 2)
+    return f, seq - f
+
+
+def train_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, jax.ShapeDtypeStruct]:
+    B, S = shape.global_batch, shape.seq_len
+    emb_dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    if cfg.family == "vlm":
+        F, T = _split_vlm_seq(cfg, S)
+        return {
+            "embeds": jax.ShapeDtypeStruct((B, F, cfg.d_model), emb_dt),
+            "tokens": jax.ShapeDtypeStruct((B, T), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        }
+    if cfg.family == "audio":
+        return {
+            "embeds": jax.ShapeDtypeStruct((B, S, cfg.d_model), emb_dt),
+            "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        }
+    return {
+        "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+    }
+
+
+def prefill_input_specs(cfg: ModelConfig, shape: ShapeConfig):
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.family in ("vlm",):
+        F, T = _split_vlm_seq(cfg, S)
+        # prefill over the text part; frontend embeds enter via forward()
+        return {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    if cfg.family == "audio":
+        emb_dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+        return {"embeds": jax.ShapeDtypeStruct((B, S, cfg.d_model), emb_dt)}
+    return {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+
+
+def decode_input_specs(cfg: ModelConfig, shape: ShapeConfig):
+    """Decode step: one new token against a cache of seq_len."""
+    from repro.models import lm
+
+    B, S = shape.global_batch, shape.seq_len
+    cache = jax.eval_shape(lambda: lm.init_cache(cfg, B, S))
+    return {
+        "tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+        "cache": cache,
+    }
+
+
+def synth_train_batch(cfg: ModelConfig, batch: int, seq: int, seed: int = 0):
+    """Concrete random batch (smoke tests, examples)."""
+    rng = np.random.default_rng(seed)
+    emb_dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    out = {}
+    if cfg.family == "vlm":
+        F, T = _split_vlm_seq(cfg, seq)
+        out["embeds"] = jnp.asarray(
+            rng.normal(size=(batch, F, cfg.d_model)).astype(np.float32), emb_dt
+        )
+        out["tokens"] = jnp.asarray(
+            rng.integers(0, cfg.vocab_size, size=(batch, T)), jnp.int32
+        )
+        labels = rng.integers(0, cfg.vocab_size, size=(batch, seq))
+        labels[:, :F] = -100  # no loss on image positions
+        out["labels"] = jnp.asarray(labels, jnp.int32)
+    elif cfg.family == "audio":
+        out["embeds"] = jnp.asarray(
+            rng.normal(size=(batch, seq, cfg.d_model)).astype(np.float32), emb_dt
+        )
+        out["labels"] = jnp.asarray(
+            rng.integers(0, cfg.vocab_size, size=(batch, seq)), jnp.int32
+        )
+    else:
+        out["tokens"] = jnp.asarray(
+            rng.integers(0, cfg.vocab_size, size=(batch, seq)), jnp.int32
+        )
+        out["labels"] = jnp.asarray(
+            rng.integers(0, cfg.vocab_size, size=(batch, seq)), jnp.int32
+        )
+    return out

@@ -1,0 +1,598 @@
+"""The LM model zoo: one functional implementation covering dense / MoE /
+SSM / hybrid / VLM / audio architectures, driven entirely by ``ModelConfig``.
+
+Params are a plain pytree; per-layer params are stacked on a leading L axis
+and the layer stack runs under ``lax.scan`` (+ ``jax.checkpoint``), so HLO
+size and compile time are depth-independent and remat policy is uniform.
+
+Entry points:
+  init_params(cfg, key)                  → params
+  forward(params, cfg, tokens/embeds)    → final hidden states
+  loss_fn(params, cfg, batch)            → (loss, metrics)   [train_step body]
+  prefill(params, cfg, tokens)           → (logits_last, cache)
+  decode_step(params, cfg, cache, ...)   → (logits, cache)   [serve_step body]
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import moe as MOE
+from repro.models import ssm as SSM
+from repro.models.sharding import constrain_batch, constrain_act
+
+Params = Dict[str, Any]
+
+
+def _dtype(cfg: ModelConfig):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[cfg.dtype]
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def _dense_block_shapes(cfg: ModelConfig) -> Dict[str, Tuple[int, ...]]:
+    d, hd = cfg.d_model, cfg.head_dim
+    nh, nkv, f = cfg.n_heads, cfg.n_kv_heads, cfg.d_ff
+    s: Dict[str, Tuple[int, ...]] = {}
+    if cfg.family != "ssm":
+        s.update(
+            wq=(d, nh * hd), wk=(d, nkv * hd), wv=(d, nkv * hd), wo=(nh * hd, d)
+        )
+        if cfg.attn_bias:
+            s.update(bq=(nh * hd,), bk=(nkv * hd,), bv=(nkv * hd,))
+    if cfg.family == "moe":
+        E = cfg.n_experts
+        s.update(router=(d, E), mwg=(E, d, f), mwd=(E, f, d))
+        if cfg.mlp_type in ("swiglu", "geglu"):
+            s.update(mwu=(E, d, f))
+    elif cfg.family != "ssm":
+        s.update(wg=(d, f), wd_=(f, d))
+        if cfg.mlp_type in ("swiglu", "geglu"):
+            s.update(wu=(d, f))
+    if cfg.family in ("ssm", "hybrid"):
+        di = cfg.d_inner
+        H = cfg.n_ssm_heads
+        G, N, K = 1, cfg.ssm_state, cfg.conv_kernel
+        s.update(
+            swz=(d, di), swx=(d, di), swB=(d, G * N), swC=(d, G * N), swdt=(d, H),
+            sconv=(di + 2 * G * N, K), sA_log=(H,), sD=(H,), sdt_bias=(H,),
+            snorm=(di,), sout=(di, d),
+        )
+    if cfg.norm_type != "nonparam_ln":
+        s.update(norm1=(d,), norm2=(d,))
+    return s
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Params:
+    dt = _dtype(cfg)
+    d, V, Ln = cfg.d_model, cfg.vocab_size, cfg.n_layers
+    keys = jax.random.split(key, 8)
+
+    def nrm(k, shape, scale=None):
+        scale = scale if scale is not None else 0.02
+        return (jax.random.normal(k, shape, jnp.float32) * scale).astype(dt)
+
+    Vp = cfg.vocab_padded
+    params: Params = {"embed": nrm(keys[0], (Vp, d))}
+    if not cfg.tie_embeddings:
+        params["lm_head"] = nrm(keys[1], (d, Vp))
+    if cfg.norm_type != "nonparam_ln":
+        params["final_norm"] = jnp.zeros((d,), dt)
+
+    shapes = _dense_block_shapes(cfg)
+    bkeys = jax.random.split(keys[2], len(shapes))
+    blocks: Params = {}
+    for (name, shape), k in zip(sorted(shapes.items()), bkeys):
+        full = (Ln,) + shape
+        if name.startswith("norm") or name in ("snorm",):
+            blocks[name] = jnp.zeros(full, dt)
+        elif name in ("bq", "bk", "bv", "sdt_bias"):
+            blocks[name] = jnp.zeros(full, dt)
+        elif name == "sA_log":
+            # A ∈ [-1.6, -0.4]: log(-A) stored for positivity
+            blocks[name] = jnp.log(
+                jnp.linspace(0.5, 1.5, cfg.n_ssm_heads, dtype=jnp.float32)
+            )[None, :].repeat(Ln, 0).astype(jnp.float32)
+        elif name == "sD":
+            blocks[name] = jnp.ones(full, dt)
+        else:
+            fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+            blocks[name] = nrm(k, full, scale=1.0 / math.sqrt(max(1, fan_in)))
+    params["blocks"] = blocks
+    return params
+
+
+def grouped_decode(cfg: ModelConfig) -> bool:
+    """Static local/global layer grouping for decode (sliding-window archs
+    whose pattern divides the stack): caches are allocated (L/g, g, ...)."""
+    g = cfg.global_interval
+    return bool(
+        cfg.sliding_window is not None and g and cfg.n_layers % g == 0
+        and cfg.family != "ssm"
+    )
+
+
+def layer_flags(cfg: ModelConfig) -> jnp.ndarray:
+    """(L,) bool — True where the layer uses *global* attention."""
+    if cfg.sliding_window is None or cfg.global_interval is None:
+        return jnp.ones((cfg.n_layers,), bool)
+    idx = np.arange(cfg.n_layers)
+    return jnp.asarray((idx % cfg.global_interval) == cfg.global_interval - 1)
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+def _attn(
+    h, blk, cfg: ModelConfig, positions, is_global,
+    cache_kv=None, pos=None, ring: bool = False,
+):
+    """Returns (out, new_cache_kv or None).  cache_kv = (k,v): (B,Smax,nkv,hd)."""
+    B, S, d = h.shape
+    nh, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = h @ blk["wq"]
+    k = h @ blk["wk"]
+    v = h @ blk["wv"]
+    if cfg.attn_bias:
+        q, k, v = q + blk["bq"], k + blk["bk"], v + blk["bv"]
+    q = q.reshape(B, S, nh, hd)
+    k = k.reshape(B, S, nkv, hd)
+    v = v.reshape(B, S, nkv, hd)
+    if cfg.use_rope:
+        q = L.rope(q, positions, cfg.rope_theta)
+        k = L.rope(k, positions, cfg.rope_theta)
+    if cache_kv is None:
+        out = L.attention(
+            q, k, v, positions, positions,
+            causal=cfg.causal, window=cfg.sliding_window, is_global=is_global,
+            softcap=cfg.logit_softcap,
+            blockwise_threshold=cfg.blockwise_threshold,
+        )
+        new_cache = (k, v)
+    elif ring:
+        # sliding-window layer with a RING cache of Wa = min(window, max_seq)
+        # slots: slot i holds the newest position ≡ i (mod Wa).  Allocation
+        # and reads shrink by S/Wa (gemma3 decode_32k: 32×) and stay local —
+        # no dynamic slicing across the sharded sequence dim.
+        ck, cv = cache_kv  # (B, Wa, nkv, hd)
+        Wa = ck.shape[1]
+        rpos = pos % Wa
+        ck = lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, rpos, 0, 0))
+        cv = lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, rpos, 0, 0))
+        slots = jnp.arange(Wa, dtype=jnp.int32)
+        kv_pos = pos - ((pos - slots) % Wa)  # unwritten → i−Wa, window-masked
+        out = L.attention(
+            q, ck, cv, positions, kv_pos,
+            causal=True, window=cfg.sliding_window, is_global=False,
+            softcap=cfg.logit_softcap,
+            blockwise_threshold=cfg.blockwise_threshold,
+        )
+        new_cache = (ck, cv)
+    else:
+        ck, cv = cache_kv  # (B, Smax, nkv, hd)
+        ck = lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, pos, 0, 0))
+        cv = lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, pos, 0, 0))
+        Smax = ck.shape[1]
+        kv_pos = jnp.arange(Smax, dtype=jnp.int32)
+        # unwritten cache slots are masked by the causal test vs q position
+        out = L.attention(
+            q, ck, cv, positions, kv_pos,
+            causal=True, window=cfg.sliding_window, is_global=is_global,
+            softcap=cfg.logit_softcap,
+            blockwise_threshold=cfg.blockwise_threshold,
+        )
+        new_cache = (ck, cv)
+    out = out.reshape(B, S, nh * hd) @ blk["wo"]
+    return out, new_cache
+
+
+def _mlp(h, blk, cfg: ModelConfig):
+    if cfg.family == "moe":
+        B, S, d = h.shape
+        y, aux = MOE.moe_layer(
+            h.reshape(B * S, d),
+            blk["router"], blk["mwg"], blk.get("mwu"), blk["mwd"],
+            k=cfg.experts_per_token,
+            capacity_factor=cfg.moe_capacity_factor,
+            mlp_type=cfg.mlp_type,
+        )
+        return y.reshape(B, S, d), aux
+    wg, wd = blk["wg"], blk["wd_"]
+    wu = blk.get("wu")
+    return L.mlp(h, wg, wu if wu is not None else wg, wd, cfg.mlp_type), {}
+
+
+def _ssm(h, blk, cfg: ModelConfig, conv_cache=None, ssm_state=None):
+    """Mamba2 (SSD) mixer.  Returns (out, (new_conv_cache, new_state))."""
+    B, S, d = h.shape
+    di, N, H = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+    P = di // H
+    G = 1
+    z = h @ blk["swz"]
+    x = h @ blk["swx"]
+    Bm = h @ blk["swB"]
+    Cm = h @ blk["swC"]
+    dt = jax.nn.softplus((h @ blk["swdt"]).astype(jnp.float32) + blk["sdt_bias"])
+    xbc = jnp.concatenate([x, Bm, Cm], axis=-1)
+    xbc, new_conv = SSM.causal_conv1d(xbc, blk["sconv"], conv_cache)
+    x, Bm, Cm = jnp.split(xbc, [di, di + G * N], axis=-1)
+    A = -jnp.exp(blk["sA_log"].astype(jnp.float32))
+    D = blk["sD"].astype(jnp.float32)
+    if ssm_state is None:
+        chunk = min(cfg.ssm_chunk, S)
+        while S % chunk:  # largest divisor ≤ configured chunk (smoke shapes)
+            chunk -= 1
+        y, new_state = SSM.ssd_chunked(
+            x.reshape(B, S, H, P), dt,
+            A, Bm.reshape(B, S, G, N), Cm.reshape(B, S, G, N), D,
+            chunk=chunk, return_state=True,
+        )
+    else:
+        y, new_state = SSM.ssd_decode_step(
+            ssm_state, x.reshape(B, H, P), dt.reshape(B, H),
+            A, Bm.reshape(B, G, N), Cm.reshape(B, G, N), D,
+        )
+        y = y.reshape(B, 1, H, P)
+    y = y.reshape(B, S, di) * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    y = L.rmsnorm(y, blk["snorm"])
+    return y @ blk["sout"], (new_conv, new_state)
+
+
+def _block(h, blk, cfg: ModelConfig, positions, is_global, caches, pos,
+           ring: bool = False):
+    """One transformer block; caches is a dict possibly holding kv / conv /
+    state entries (None values in train/prefill-without-cache paths)."""
+    new_caches = {}
+    aux = {}
+    nrm = lambda x, sc: L.norm(x, sc, cfg.norm_type)
+    sc1 = blk.get("norm1")
+    sc2 = blk.get("norm2")
+
+    if cfg.family == "ssm":
+        mixer_in = nrm(h, sc1)
+        out, (cv, st) = _ssm(mixer_in, blk, cfg, caches.get("conv"), caches.get("state"))
+        new_caches.update(conv=cv, state=st)
+        h = h + out
+        return h, new_caches, aux
+
+    mixer_in = nrm(h, sc1)
+    if cfg.family == "hybrid":
+        a_out, kv = _attn(mixer_in, blk, cfg, positions, is_global,
+                          caches.get("kv"), pos, ring)
+        s_out, (cv, st) = _ssm(mixer_in, blk, cfg, caches.get("conv"),
+                               caches.get("state"))
+        out = 0.5 * (a_out + s_out)
+        new_caches.update(kv=kv, conv=cv, state=st)
+    else:
+        out, kv = _attn(mixer_in, blk, cfg, positions, is_global,
+                        caches.get("kv"), pos, ring)
+        new_caches.update(kv=kv)
+    h = h + out
+    mlp_out, aux = _mlp(nrm(h, sc2), blk, cfg)
+    h = h + mlp_out
+    return h, new_caches, aux
+
+
+# ---------------------------------------------------------------------------
+# forward (train / encode)
+# ---------------------------------------------------------------------------
+def embed_tokens(params, cfg, tokens):
+    return jnp.take(params["embed"], tokens, axis=0)
+
+
+def forward(
+    params: Params,
+    cfg: ModelConfig,
+    tokens: Optional[jnp.ndarray] = None,
+    embeds: Optional[jnp.ndarray] = None,
+    remat: str = "nothing",
+) -> Tuple[jnp.ndarray, Dict]:
+    """Full-sequence forward → (hidden (B,S,d), aux)."""
+    if embeds is None:
+        h = embed_tokens(params, cfg, tokens)
+    elif tokens is not None:
+        h = jnp.concatenate([embeds.astype(_dtype(cfg)),
+                             embed_tokens(params, cfg, tokens)], axis=1)
+    else:
+        h = embeds.astype(_dtype(cfg))
+    h = constrain_batch(h)
+    B, S, d = h.shape
+    positions = jnp.arange(S, dtype=jnp.int32)
+    flags = layer_flags(cfg)
+
+    def body(carry, xs):
+        blk, is_global = xs
+        hh, aux_sum = carry
+        hh, _, aux = _block(hh, blk, cfg, positions, is_global, {}, None)
+        hh = constrain_act(hh)
+        aux_l = aux.get("moe_aux_loss", jnp.zeros((), jnp.float32))
+        return (hh, aux_sum + aux_l), None
+
+    body_fn = body
+    if remat == "nothing":
+        body_fn = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    elif remat == "dots":
+        body_fn = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        )
+    (h, aux_loss), _ = lax.scan(body_fn, (h, jnp.zeros((), jnp.float32)),
+                                (params["blocks"], flags),
+                                unroll=min(cfg.scan_unroll, cfg.n_layers))
+    h = L.norm(h, params.get("final_norm"), cfg.norm_type)
+    return h, {"moe_aux_loss": aux_loss / max(1, cfg.n_layers)}
+
+
+def lm_head_weight(params, cfg):
+    return params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+
+
+def mask_padded_logits(logits: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """Padded vocab columns must not contribute to softmax/argmax."""
+    Vp = logits.shape[-1]
+    if Vp == cfg.vocab_size:
+        return logits
+    col = jnp.arange(Vp) >= cfg.vocab_size
+    return jnp.where(col, -1e30, logits)
+
+
+def chunked_ce_loss(
+    h: jnp.ndarray,  # (B,S,d)
+    labels: jnp.ndarray,  # (B,S) int32, -100 = ignore
+    w: jnp.ndarray,  # (d,V)
+    chunk: int = 512,
+    ignore: int = -100,
+    real_vocab: int = -1,
+):
+    """Cross-entropy without materializing (B,S,V): scan over S-chunks with
+    rematerialized logits (checkpoint)."""
+    B, S, d = h.shape
+    V = w.shape[-1]
+    chunk = min(chunk, S)
+    if S % chunk:
+        chunk = S  # fallback (smoke tests with odd S)
+    nc = S // chunk
+    hc = h.reshape(B, nc, chunk, d).swapaxes(0, 1)
+    lc = labels.reshape(B, nc, chunk).swapaxes(0, 1)
+
+    @jax.checkpoint
+    def step(carry, xs):
+        tot, cnt = carry
+        hh, ll = xs
+        hh = constrain_batch(hh)
+        logits = (hh.astype(jnp.float32) @ w.astype(jnp.float32))
+        if real_vocab > 0 and real_vocab < V:
+            logits = jnp.where(jnp.arange(V) >= real_vocab, -1e30, logits)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, jnp.maximum(ll, 0)[..., None], axis=-1
+        )[..., 0]
+        mask = (ll != ignore).astype(jnp.float32)
+        tot = tot + ((logz - gold) * mask).sum()
+        cnt = cnt + mask.sum()
+        return (tot, cnt), None
+
+    (tot, cnt), _ = lax.scan(step, (jnp.zeros(()), jnp.zeros(())), (hc, lc))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def loss_fn(params: Params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray],
+            remat: str = "nothing") -> Tuple[jnp.ndarray, Dict]:
+    """batch: {tokens (B,S)} and/or {embeds (B,F,d)}, {labels (B,S_total)}."""
+    h, aux = forward(
+        params, cfg,
+        tokens=batch.get("tokens"), embeds=batch.get("embeds"), remat=remat,
+    )
+    loss = chunked_ce_loss(h, batch["labels"], lm_head_weight(params, cfg),
+                           chunk=cfg.ce_chunk, real_vocab=cfg.vocab_size)
+    total = loss + 0.01 * aux.get("moe_aux_loss", 0.0)
+    return total, {"ce_loss": loss, **aux}
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode
+# ---------------------------------------------------------------------------
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=None) -> Dict:
+    dt = dtype or _dtype(cfg)
+    Ln = cfg.n_layers
+    grouped = grouped_decode(cfg)
+    gi = cfg.global_interval if grouped else 1
+    lead = (Ln // gi, gi) if grouped else (Ln,)
+    cache: Dict[str, Any] = {"pos": jnp.zeros((), jnp.int32)}
+    if cfg.family != "ssm":
+        nkv, hd = cfg.n_kv_heads, cfg.head_dim
+        if grouped:
+            # local layers keep a ring of min(window, max_seq) slots; only
+            # the one global layer per group stores the full sequence
+            Wa = min(cfg.sliding_window, max_seq)
+            cache["k_loc"] = jnp.zeros((Ln // gi, gi - 1, batch, Wa, nkv, hd), dt)
+            cache["v_loc"] = jnp.zeros((Ln // gi, gi - 1, batch, Wa, nkv, hd), dt)
+            cache["k_glob"] = jnp.zeros((Ln // gi, 1, batch, max_seq, nkv, hd), dt)
+            cache["v_glob"] = jnp.zeros((Ln // gi, 1, batch, max_seq, nkv, hd), dt)
+        else:
+            cache["k"] = jnp.zeros(lead + (batch, max_seq, nkv, hd), dt)
+            cache["v"] = jnp.zeros(lead + (batch, max_seq, nkv, hd), dt)
+    if cfg.family in ("ssm", "hybrid"):
+        di, N, H = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+        P = di // H
+        G = 1
+        cache["conv"] = jnp.zeros(lead + (batch, cfg.conv_kernel - 1, di + 2 * G * N), dt)
+        cache["state"] = jnp.zeros(lead + (batch, H, N, P), jnp.float32)
+    return cache
+
+
+def _layer_caches(cfg, cache):
+    out = {}
+    if "k" in cache:
+        out["kv"] = (cache["k"], cache["v"])
+    if "conv" in cache:
+        out["conv"] = cache["conv"]
+        out["state"] = cache["state"]
+    return out
+
+
+def _store(cfg, new_layer_caches):
+    out = {}
+    if "kv" in new_layer_caches and new_layer_caches["kv"] is not None:
+        out["k"], out["v"] = new_layer_caches["kv"]
+    if new_layer_caches.get("conv") is not None:
+        out["conv"] = new_layer_caches["conv"]
+    if new_layer_caches.get("state") is not None:
+        out["state"] = new_layer_caches["state"]
+    return out
+
+
+def decode_step(
+    params: Params, cfg: ModelConfig, cache: Dict, tokens: jnp.ndarray
+) -> Tuple[jnp.ndarray, Dict]:
+    """tokens: (B, 1) → (logits (B, 1, V), updated cache).  One new token
+    against a cache of ``max_seq`` (the decode_32k / long_500k step)."""
+    B = tokens.shape[0]
+    pos = cache["pos"]
+    h = constrain_batch(embed_tokens(params, cfg, tokens))
+    positions = (pos + jnp.arange(1, dtype=jnp.int32)).astype(jnp.int32)
+    flags = layer_flags(cfg)
+
+    def _run_block(h, blk, is_global, lcache):
+        caches = {}
+        if "k" in lcache:
+            caches["kv"] = (lcache["k"], lcache["v"])
+        if "conv" in lcache:
+            caches["conv"] = lcache["conv"]
+            caches["state"] = lcache["state"]
+        hh, ncs, _ = _block(h, blk, cfg, positions, is_global, caches, pos)
+        return constrain_batch(hh), _store(cfg, ncs)
+
+    layer_cache = {k: v for k, v in cache.items() if k != "pos"}
+    g = cfg.global_interval
+    if grouped_decode(cfg):
+        # super-block scan: each step = g layers with STATIC local/global
+        # flags (…local×(g−1), global).  Local layers use ring caches of
+        # window slots; caches are allocated pre-grouped (no reshape, so the
+        # donated buffers alias through the scan).
+        regroup = lambda a: a.reshape((cfg.n_layers // g, g) + a.shape[1:])
+        blocks_g = jax.tree.map(regroup, params["blocks"])
+
+        def body(h, xs):
+            blk_g, lcache_g = xs
+            loc_emits, glob_emit, other_emits = [], None, []
+            for j in range(g):
+                blk_j = jax.tree.map(lambda a: a[j], blk_g)
+                is_glob = j == g - 1
+                caches = {}
+                if "k_loc" in lcache_g:
+                    if is_glob:
+                        caches["kv"] = (lcache_g["k_glob"][0], lcache_g["v_glob"][0])
+                    else:
+                        caches["kv"] = (lcache_g["k_loc"][j], lcache_g["v_loc"][j])
+                if "conv" in lcache_g:
+                    caches["conv"] = lcache_g["conv"][j]
+                    caches["state"] = lcache_g["state"][j]
+                h, ncs, _ = _block(h, blk_j, cfg, positions, is_glob, caches,
+                                   pos, ring=not is_glob)
+                h = constrain_batch(h)
+                st = _store(cfg, ncs)
+                if "k" in st:
+                    if is_glob:
+                        glob_emit = {"k_glob": st["k"], "v_glob": st["v"]}
+                    else:
+                        loc_emits.append({"k_loc": st["k"], "v_loc": st["v"]})
+                other_emits.append({k2: v2 for k2, v2 in st.items()
+                                    if k2 in ("conv", "state")})
+            out = {}
+            if loc_emits:
+                out["k_loc"] = jnp.stack([e["k_loc"] for e in loc_emits], 0)
+                out["v_loc"] = jnp.stack([e["v_loc"] for e in loc_emits], 0)
+                out["k_glob"] = glob_emit["k_glob"][None]
+                out["v_glob"] = glob_emit["v_glob"][None]
+            if other_emits and other_emits[0]:
+                out["conv"] = jnp.stack([e["conv"] for e in other_emits], 0)
+                out["state"] = jnp.stack([e["state"] for e in other_emits], 0)
+            return h, out
+
+        h, new_layer_cache = lax.scan(body, h, (blocks_g, layer_cache))
+    else:
+        def body(h, xs):
+            blk, is_global, lcache = xs
+            return _run_block(h, blk, bool(is_global) if isinstance(is_global, bool) else is_global, lcache)
+
+        h, new_layer_cache = lax.scan(
+            body, h, (params["blocks"], flags, layer_cache),
+            unroll=min(cfg.scan_unroll, cfg.n_layers),
+        )
+    h = L.norm(h, params.get("final_norm"), cfg.norm_type)
+    logits = h.astype(jnp.float32) @ lm_head_weight(params, cfg).astype(jnp.float32)
+    logits = mask_padded_logits(logits, cfg)
+    new_cache = dict(new_layer_cache, pos=pos + 1)
+    return logits, new_cache
+
+
+def prefill(
+    params: Params, cfg: ModelConfig, tokens: jnp.ndarray,
+    max_seq: Optional[int] = None, remat: str = "nothing",
+) -> Tuple[jnp.ndarray, Dict]:
+    """Full-sequence prefill → (last-position logits (B,V), cache)."""
+    B, S = tokens.shape
+    max_seq = max_seq or S
+    h = constrain_batch(embed_tokens(params, cfg, tokens))
+    positions = jnp.arange(S, dtype=jnp.int32)
+    flags = layer_flags(cfg)
+    dt = _dtype(cfg)
+
+    def body(hh, xs):
+        blk, is_global = xs
+        out_h, ncs, _ = _block(hh, blk, cfg, positions, is_global, {}, None)
+        out_h = constrain_act(out_h)
+        emit = {}
+        if "kv" in ncs and ncs["kv"] is not None:
+            k, v = ncs["kv"]
+            if max_seq > S:
+                pad = [(0, 0), (0, max_seq - S), (0, 0), (0, 0)]
+                k, v = jnp.pad(k, pad), jnp.pad(v, pad)
+            emit["k"], emit["v"] = k.astype(dt), v.astype(dt)
+        if ncs.get("conv") is not None:
+            emit["conv"] = ncs["conv"]
+        if ncs.get("state") is not None:
+            emit["state"] = ncs["state"]
+        return out_h, emit
+
+    body_fn = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable) \
+        if remat == "nothing" else body
+    h, layer_cache = lax.scan(body_fn, h, (params["blocks"], flags),
+                              unroll=min(cfg.scan_unroll, cfg.n_layers))
+    h = L.norm(h, params.get("final_norm"), cfg.norm_type)
+    last = h[:, -1, :]
+    logits = last.astype(jnp.float32) @ lm_head_weight(params, cfg).astype(jnp.float32)
+    logits = mask_padded_logits(logits, cfg)
+    if grouped_decode(cfg):
+        gi = cfg.global_interval
+        layer_cache = jax.tree.map(
+            lambda a: a.reshape((cfg.n_layers // gi, gi) + a.shape[1:]),
+            layer_cache,
+        )
+        if "k" in layer_cache:
+            Wa = min(cfg.sliding_window, max_seq)
+            kk, vv = layer_cache.pop("k"), layer_cache.pop("v")
+
+            s0 = max(S - Wa, 0)  # static
+
+            def to_ring(a):  # (Lg, g-1, B, max_seq, kv, hd) → ring of Wa
+                last = a[:, :, :, s0 : s0 + Wa]
+                # slot for position p is p % Wa → roll by s0 mod Wa
+                return jnp.roll(last, s0 % Wa, axis=3)
+
+            layer_cache["k_loc"] = to_ring(kk[:, : gi - 1])
+            layer_cache["v_loc"] = to_ring(vv[:, : gi - 1])
+            layer_cache["k_glob"] = kk[:, gi - 1 :]
+            layer_cache["v_glob"] = vv[:, gi - 1 :]
+    cache = dict(layer_cache, pos=jnp.asarray(S, jnp.int32))
+    return logits, cache

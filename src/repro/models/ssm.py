@@ -1,0 +1,155 @@
+"""Mamba-2 SSD (state-space duality) blocks [arXiv:2405.21060].
+
+The SSD layer computes, per head h with scalar decay a_t = exp(Δt·A_h):
+
+    s_t = a_t · s_{t−1} + Δt · B_t ⊗ x_t          (state  N×P)
+    y_t = C_t · s_t + D_h · x_t
+
+Chunked algorithm (the paper's Listing 1, matmul-rich → MXU-friendly):
+split the sequence into chunks of length L; within a chunk the output is an
+attention-like matmul with a decay-weighted lower-triangular mask; across
+chunks a short scan carries the (N, P) state.  This *is* the paper's
+(Cresson) streaming idea along time: bounded state, region-by-region.
+
+Shapes: x (B,S,H,P), dt (B,S,H), A (H,), B/C (B,S,G,N) with G groups
+broadcast over heads, D (H,).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def ssd_reference(x, dt, A, Bm, Cm, D) -> jnp.ndarray:
+    """Step-by-step recurrence oracle (slow, for tests)."""
+    Bsz, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    Bh = jnp.repeat(Bm, rep, axis=2)  # (B,S,H,N)
+    Ch = jnp.repeat(Cm, rep, axis=2)
+    a = jnp.exp(dt * A[None, None, :])  # (B,S,H)
+
+    def step(state, inp):
+        xt, at, dtt, bt, ct = inp  # (B,H,P),(B,H),(B,H),(B,H,N),(B,H,N)
+        state = state * at[..., None, None] + (
+            dtt[..., None, None] * bt[..., :, None] * xt[..., None, :]
+        )  # (B,H,N,P)
+        y = jnp.einsum("bhn,bhnp->bhp", ct, state)
+        return state, y
+
+    init = jnp.zeros((Bsz, H, N, P), jnp.float32)
+    xs = (
+        x.swapaxes(0, 1).astype(jnp.float32),
+        a.swapaxes(0, 1).astype(jnp.float32),
+        dt.swapaxes(0, 1).astype(jnp.float32),
+        Bh.swapaxes(0, 1).astype(jnp.float32),
+        Ch.swapaxes(0, 1).astype(jnp.float32),
+    )
+    _, ys = lax.scan(step, init, xs)
+    y = ys.swapaxes(0, 1) + D[None, None, :, None] * x.astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, D, chunk: int = 256,
+                initial_state: Optional[jnp.ndarray] = None,
+                return_state: bool = False):
+    """Chunked SSD; S must divide by ``chunk``."""
+    Bsz, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    assert S % chunk == 0, (S, chunk)
+    nc, L = S // chunk, chunk
+    rep = H // G
+
+    f32 = jnp.float32
+    xc = x.reshape(Bsz, nc, L, H, P).astype(f32)
+    dtc = dt.reshape(Bsz, nc, L, H).astype(f32)
+    Bc = jnp.repeat(Bm, rep, axis=2).reshape(Bsz, nc, L, H, N).astype(f32)
+    Cc = jnp.repeat(Cm, rep, axis=2).reshape(Bsz, nc, L, H, N).astype(f32)
+
+    loga = dtc * A[None, None, None, :]  # (B,nc,L,H) log decay per step
+    cum = jnp.cumsum(loga, axis=2)  # inclusive cumulative log decay
+
+    # ---- intra-chunk (attention-like, causal) -----------------------------
+    # score[i,j] = C_i·B_j · exp(cum_i − cum_j) · Δt_j   for j ≤ i
+    cb = jnp.einsum("bclhn,bcmhn->bchlm", Cc, Bc)  # (B,nc,H,L,L)
+    ii = cum.transpose(0, 1, 3, 2)[..., :, None]  # (B,nc,H,L,1)
+    jj = cum.transpose(0, 1, 3, 2)[..., None, :]
+    decay = jnp.exp(ii - jj)
+    causal_mask = jnp.tril(jnp.ones((L, L), bool))
+    w = jnp.where(causal_mask, cb * decay, 0.0) * dtc.transpose(0, 1, 3, 2)[..., None, :]
+    y_intra = jnp.einsum("bchlm,bcmhp->bclhp", w, xc)
+
+    # ---- chunk states ------------------------------------------------------
+    # S_c = Σ_j exp(cum_L − cum_j)·Δt_j · B_j ⊗ x_j
+    last = cum[:, :, -1:, :]  # (B,nc,1,H)
+    decay_to_end = jnp.exp(last - cum)  # (B,nc,L,H)
+    contrib = (decay_to_end * dtc)[..., None] * Bc  # (B,nc,L,H,N)
+    S_c = jnp.einsum("bclhn,bclhp->bchnp", contrib, xc)  # (B,nc,H,N,P)
+
+    # ---- inter-chunk state recurrence -------------------------------------
+    chunk_decay = jnp.exp(last[:, :, 0, :])  # (B,nc,H)
+
+    def carry_step(state, inp):
+        s_c, dec = inp  # (B,H,N,P), (B,H)
+        new = state * dec[..., None, None] + s_c
+        return new, state  # emit state *entering* the chunk
+
+    init = (
+        jnp.zeros((Bsz, H, N, P), f32)
+        if initial_state is None
+        else initial_state.astype(f32)
+    )
+    final_state, prev_states = lax.scan(
+        carry_step, init, (S_c.swapaxes(0, 1), chunk_decay.swapaxes(0, 1))
+    )
+    prev = prev_states.swapaxes(0, 1)  # (B,nc,H,N,P) state entering each chunk
+
+    # ---- inter-chunk output: y_i += C_i · (exp(cum_i) · prev) --------------
+    c_weighted = Cc * jnp.exp(cum)[..., None]
+    y_inter = jnp.einsum("bclhn,bchnp->bclhp", c_weighted, prev)
+
+    y = (y_intra + y_inter).reshape(Bsz, S, H, P)
+    y = y + D[None, None, :, None] * x.astype(f32)
+    y = y.astype(x.dtype)
+    if return_state:
+        return y, final_state
+    return y
+
+
+def ssd_decode_step(state, x, dt, A, Bm, Cm, D) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One-token recurrent update.  state: (B,H,N,P); x: (B,H,P);
+    dt: (B,H); Bm/Cm: (B,G,N).  Returns (y (B,H,P), new_state)."""
+    H = x.shape[1]
+    G = Bm.shape[1]
+    rep = H // G
+    Bh = jnp.repeat(Bm, rep, axis=1).astype(jnp.float32)  # (B,H,N)
+    Ch = jnp.repeat(Cm, rep, axis=1).astype(jnp.float32)
+    a = jnp.exp(dt.astype(jnp.float32) * A[None, :])
+    state = state * a[..., None, None] + (
+        dt.astype(jnp.float32)[..., None, None]
+        * Bh[..., :, None]
+        * x.astype(jnp.float32)[..., None, :]
+    )
+    y = jnp.einsum("bhn,bhnp->bhp", Ch, state) + D[None, :, None] * x.astype(jnp.float32)
+    return y.astype(x.dtype), state
+
+
+def causal_conv1d(x: jnp.ndarray, w: jnp.ndarray, cache: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv.  x: (B,S,C); w: (C,K).  With ``cache``
+    ((B,K−1,C), decode) returns (y, new_cache)."""
+    K = w.shape[-1]
+    if cache is not None:
+        xin = jnp.concatenate([cache, x], axis=1)  # (B, K-1+S, C)
+        new_cache = xin[:, -(K - 1):, :]
+    else:
+        xin = jnp.pad(x, [(0, 0), (K - 1, 0), (0, 0)])
+        new_cache = xin[:, -(K - 1):, :]
+    # y_t = Σ_k w_k · x_{t−K+1+k}
+    S = x.shape[1]
+    y = jnp.zeros_like(x, dtype=jnp.float32)
+    for k in range(K):
+        y = y + xin[:, k : k + S, :].astype(jnp.float32) * w[None, None, :, k]
+    return jax.nn.silu(y).astype(x.dtype), new_cache

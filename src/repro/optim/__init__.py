@@ -1,0 +1,18 @@
+from repro.optim.adamw import AdamWState, adamw_init, adamw_update, clip_by_global_norm
+from repro.optim.compress import (
+    compress_gradients,
+    decompress_gradients,
+    init_residuals,
+    local_scales,
+)
+
+__all__ = [
+    "AdamWState",
+    "adamw_init",
+    "adamw_update",
+    "clip_by_global_norm",
+    "compress_gradients",
+    "decompress_gradients",
+    "init_residuals",
+    "local_scales",
+]

@@ -1,0 +1,60 @@
+"""Error-feedback int8 gradient compression for the cross-pod all-reduce.
+
+Beyond-paper distributed-optimization feature: the pod axis crosses the
+slowest links (data-center interconnect between pods), so the DP gradient
+all-reduce there dominates at scale.  Per-tensor symmetric int8 quantization
+with error feedback (residuals carried to the next step) cuts those bytes 4×
+versus f32 / 2× versus bf16, with convergence preserved by the standard
+EF-SGD argument.
+
+All ranks must quantize with a *shared* scale so that the int accumulation
+commutes with dequantization:
+
+    local_scale = max|g+r| / 127
+    scale   = lax.pmax(local_scale, "pod")          # agree across ranks
+    q, r'   = quantize(g + r, scale)
+    g_sum   = lax.psum(q.astype(int32), "pod")      # 1-byte wire format
+    g_mean  = g_sum * scale / n_pods
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def local_scales(grads: Any, residuals: Any) -> Any:
+    return jax.tree.map(
+        lambda g, r: jnp.maximum(jnp.max(jnp.abs(g.astype(jnp.float32) + r)), 1e-12)
+        / 127.0,
+        grads,
+        residuals,
+    )
+
+
+def compress_gradients(grads: Any, residuals: Any, scales: Any) -> Tuple[Any, Any]:
+    """Quantize (g + residual) with the given shared scales.
+    Returns (int8 tensors, new residuals)."""
+
+    def comp(g, r, s):
+        gf = g.astype(jnp.float32) + r
+        q = jnp.clip(jnp.round(gf / s), -127, 127).astype(jnp.int8)
+        return q, gf - q.astype(jnp.float32) * s
+
+    out = jax.tree.map(comp, grads, residuals, scales)
+    is_pair = lambda x: isinstance(x, tuple) and len(x) == 2
+    q = jax.tree.map(lambda t: t[0], out, is_leaf=is_pair)
+    new_r = jax.tree.map(lambda t: t[1], out, is_leaf=is_pair)
+    return q, new_r
+
+
+def decompress_gradients(q_sum: Any, scales: Any, n_ranks: int) -> Any:
+    """q_sum: int32 sums over ranks → mean float gradients."""
+    return jax.tree.map(
+        lambda q, s: q.astype(jnp.float32) * (s / max(1, n_ranks)), q_sum, scales
+    )
+
+
+def init_residuals(params) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

@@ -1,0 +1,138 @@
+"""The paper's seven benchmark pipelines P1–P7 (§III.B) as ready-made graphs.
+
+Each builder returns ``(pipeline, mapper)`` terminated by the given mapper
+factory (defaults to an in-memory mapper; pass a ParallelRasterWriter factory
+for file output, which reproduces the paper's parallel-write setup).
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional, Tuple
+
+import numpy as np
+
+from repro.core import Mapper, Pipeline, Source
+from repro.filters import (
+    BandStatistics,
+    Convert,
+    HaralickTextures,
+    MeanShift,
+    Orthorectify,
+    PansharpenFuse,
+    RandomForestClassify,
+    Resample,
+    SensorModel,
+    train_forest,
+)
+from repro.raster import MemoryMapper, SyntheticScene, make_spot6_pair
+
+
+def _mapper(factory: Optional[Callable[[], Mapper]]) -> Mapper:
+    return factory() if factory is not None else MemoryMapper()
+
+
+def p1_orthorectification(
+    src: Source, model: Optional[SensorModel] = None,
+    out_rows: Optional[int] = None, out_cols: Optional[int] = None,
+    mapper_factory=None, use_pallas: bool = False,
+) -> Tuple[Pipeline, Mapper]:
+    p = Pipeline()
+    s = p.add(src)
+    info = p.info(s)
+    model = model or SensorModel(
+        a_rr=1.0, a_rc=0.02, a_cr=-0.02, a_cc=1.0, b_r=3.0, b_c=-2.0,
+        disp_amp=2.0, disp_wavelength=700.0,
+    )
+    f = p.add(Orthorectify(model, out_rows or info.rows, out_cols or info.cols), [s])
+    m = p.add(_mapper(mapper_factory), [f])
+    return p, m
+
+
+def p2_textures(src: Source, mapper_factory=None, use_pallas: bool = False,
+                radius: int = 2, levels: int = 8) -> Tuple[Pipeline, Mapper]:
+    p = Pipeline()
+    s = p.add(src)
+    f = p.add(HaralickTextures(radius=radius, levels=levels, use_pallas=use_pallas), [s])
+    m = p.add(_mapper(mapper_factory), [f])
+    return p, m
+
+
+def p3_pansharpening(xs: Source, pan: Source, ratio: int = 4,
+                     mapper_factory=None, use_pallas: bool = False) -> Tuple[Pipeline, Mapper]:
+    p = Pipeline()
+    sxs = p.add(xs)
+    span = p.add(pan)
+    up = p.add(Resample(ratio, method="bicubic", name="xs_up"), [sxs])
+    fuse = p.add(PansharpenFuse(radius=ratio // 2, use_pallas=use_pallas), [up, span])
+    m = p.add(_mapper(mapper_factory), [fuse])
+    return p, m
+
+
+def p4_classification(src: Source, n_classes: int = 4, n_train: int = 2000,
+                      mapper_factory=None, seed: int = 0) -> Tuple[Pipeline, Mapper]:
+    """Trains a small forest on synthetic labels derived from band rules, then
+    classifies the image — self-contained like the paper's pre-trained model."""
+    p = Pipeline()
+    s = p.add(src)
+    info = p.info(s)
+    # draw training pixels from the source (host-side) + rule-based labels
+    rng = np.random.default_rng(seed)
+    from repro.core.region import ImageRegion
+
+    rows = rng.integers(0, max(1, info.rows - 64), size=8)
+    samples = []
+    for r in rows:
+        block = np.asarray(src.generate(ImageRegion((int(r), 0), (min(64, info.rows), min(256, info.cols)))))
+        samples.append(block.reshape(-1, info.bands))
+    X = np.concatenate(samples)[:n_train].astype(np.float32)
+    # labels: quantile buckets of a band-mix index (deterministic ground truth)
+    mix = X @ np.linspace(1.0, 2.0, info.bands)
+    edges = np.quantile(mix, np.linspace(0, 1, n_classes + 1)[1:-1])
+    y = np.digitize(mix, edges).astype(np.int64)
+    forest = train_forest(X, y, n_trees=8, max_depth=8, seed=seed)
+    f = p.add(RandomForestClassify(forest, mean=X.mean(0), std=X.std(0) + 1e-6), [s])
+    m = p.add(_mapper(mapper_factory), [f])
+    return p, m
+
+
+def p5_meanshift(src: Source, mapper_factory=None, use_pallas: bool = False,
+                 hs: int = 3, hr: float = 120.0, n_iter: int = 4) -> Tuple[Pipeline, Mapper]:
+    p = Pipeline()
+    s = p.add(src)
+    f = p.add(MeanShift(hs=hs, hr=hr, n_iter=n_iter, use_pallas=use_pallas), [s])
+    m = p.add(_mapper(mapper_factory), [f])
+    return p, m
+
+
+def p6_conversion(src: Source, mapper_factory=None) -> Tuple[Pipeline, Mapper]:
+    p = Pipeline()
+    s = p.add(src)
+    f = p.add(Convert(np.uint8, in_range=(0.0, 4096.0)), [s])
+    m = p.add(_mapper(mapper_factory), [f])
+    return p, m
+
+
+def p7_resampling(src: Source, factor: int = 4, mapper_factory=None) -> Tuple[Pipeline, Mapper]:
+    p = Pipeline()
+    s = p.add(src)
+    f = p.add(Resample(factor, method="bicubic"), [s])
+    m = p.add(_mapper(mapper_factory), [f])
+    return p, m
+
+
+def io_passthrough(src: Source, mapper_factory=None) -> Tuple[Pipeline, Mapper]:
+    """The paper's pure I/O pipeline (source + parallel writer)."""
+    p = Pipeline()
+    s = p.add(src)
+    m = p.add(_mapper(mapper_factory), [s])
+    return p, m
+
+
+ALL = {
+    "P1": p1_orthorectification,
+    "P2": p2_textures,
+    "P4": p4_classification,
+    "P5": p5_meanshift,
+    "P6": p6_conversion,
+    "P7": p7_resampling,
+    "IO": io_passthrough,
+}

@@ -1,0 +1,49 @@
+"""Mappers: terminate pipelines by writing or collecting pixels (paper §II.B/D)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+from repro.core.process_object import ImageInfo, Mapper
+from repro.core.region import ImageRegion
+from repro.raster import io as rio
+
+
+class MemoryMapper(Mapper):
+    """Assemble produced regions into one in-memory array (paper: "interfacing
+    with some other system")."""
+
+    def __init__(self, name: Optional[str] = None):
+        super().__init__(name)
+        self.result: Optional[np.ndarray] = None
+        self._info: Optional[ImageInfo] = None
+
+    def begin(self, info: ImageInfo) -> None:
+        self._info = info
+        self.result = np.zeros((info.rows, info.cols, info.bands), dtype=info.dtype)
+
+    def consume(self, out_region: ImageRegion, data: np.ndarray) -> None:
+        rs, cs = out_region.slices()
+        self.result[rs, cs] = np.asarray(data, dtype=self._info.dtype).reshape(
+            out_region.rows, out_region.cols, self._info.bands
+        )
+
+
+class ParallelRasterWriter(Mapper):
+    """The paper's parallel GeoTiff writer (§II.D): every worker writes its
+    strips directly into their final in-file position (MPI-IO semantics via
+    memmap on disjoint byte ranges).  Static load balancing comes from the
+    splitting strategy + schedule, as in the paper."""
+
+    def __init__(self, path: str, name: Optional[str] = None):
+        super().__init__(name or f"write:{path}")
+        self.path = path
+        self._info: Optional[ImageInfo] = None
+
+    def begin(self, info: ImageInfo) -> None:
+        self._info = info
+        rio.create(self.path, info)
+
+    def consume(self, out_region: ImageRegion, data: np.ndarray) -> None:
+        rio.write_strip(self.path, self._info, out_region, np.asarray(data))

@@ -1,0 +1,61 @@
+"""Serving steps + a minimal batched engine.
+
+``build_prefill_step`` / ``build_decode_step`` are the dry-run targets for
+the prefill_32k / decode_32k / long_500k shapes.  ``ServeEngine`` runs
+greedy/temperature generation over a batch of requests (quickstart-scale;
+the host-side loop mirrors the streaming driver's role on the raster side).
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import lm
+
+
+def build_prefill_step(cfg: ModelConfig, max_seq: Optional[int] = None) -> Callable:
+    def prefill_step(params, tokens):
+        return lm.prefill(params, cfg, tokens, max_seq=max_seq)
+
+    return prefill_step
+
+
+def build_decode_step(cfg: ModelConfig) -> Callable:
+    def decode_step(params, cache, tokens):
+        return lm.decode_step(params, cfg, cache, tokens)
+
+    return decode_step
+
+
+class ServeEngine:
+    """Batched greedy decoding with a fixed-size KV cache."""
+
+    def __init__(self, cfg: ModelConfig, params, max_seq: int = 256):
+        self.cfg = cfg
+        self.params = params
+        self.max_seq = max_seq
+        self._prefill = jax.jit(build_prefill_step(cfg, max_seq))
+        self._decode = jax.jit(build_decode_step(cfg))
+
+    def generate(
+        self, prompts: jnp.ndarray, max_new_tokens: int = 32,
+        temperature: float = 0.0, key=None,
+    ) -> jnp.ndarray:
+        """prompts: (B, S0) int32 → (B, S0 + max_new_tokens)."""
+        logits, cache = self._prefill(self.params, prompts)
+        out = [prompts]
+        tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        for _ in range(max_new_tokens):
+            out.append(tok)
+            logits, cache = self._decode(self.params, cache, tok)
+            step_logits = logits[:, -1]
+            if temperature > 0.0 and key is not None:
+                key, sub = jax.random.split(key)
+                tok = jax.random.categorical(sub, step_logits / temperature)[:, None]
+            else:
+                tok = jnp.argmax(step_logits, axis=-1)[:, None]
+            tok = tok.astype(jnp.int32)
+        return jnp.concatenate(out, axis=1)

@@ -1,0 +1,3 @@
+from repro.train.step import build_train_step, build_grad_accum_train_step
+
+__all__ = ["build_train_step", "build_grad_accum_train_step"]

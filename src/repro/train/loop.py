@@ -1,0 +1,170 @@
+"""Fault-tolerant training loop: checkpoint/restart, elastic recovery,
+straggler detection.
+
+The loop is the LM-side analogue of the streaming executor: the data
+pipeline is the source, the jitted train step the filter, the checkpointer
+the (strip-parallel) mapper.  Fault tolerance:
+
+  * periodic async checkpoints with atomic commit;
+  * any step failure (device loss, injected fault) triggers recovery: the
+    latest committed checkpoint is restored onto a mesh rebuilt from the
+    surviving devices (``ckpt.elastic``) and training continues;
+  * per-step wall times feed a z-score straggler detector — on a real pod
+    this gates the "evict slow host + elastic restart" decision; here it
+    logs and counts.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+import time
+from typing import Any, Callable, Dict, Iterator, List, Optional
+
+import jax
+import numpy as np
+
+from repro.ckpt import AsyncCheckpointer, latest_step, restore_checkpoint
+from repro.ckpt.elastic import shrink_mesh
+from repro.configs.base import ModelConfig
+from repro.models import lm
+from repro.models.sharding import ShardingRules, set_batch_axes
+from repro.optim import adamw_init
+from repro.train.step import build_train_step
+
+
+@dataclasses.dataclass
+class LoopConfig:
+    steps: int = 100
+    ckpt_every: int = 20
+    ckpt_dir: str = "checkpoints/run"
+    lr: float = 3e-4
+    log_every: int = 10
+    straggler_zscore: float = 3.0
+    remat: str = "nothing"
+
+
+class Trainer:
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        loop: LoopConfig,
+        data_it: Iterator[Dict[str, np.ndarray]],
+        devices: Optional[List] = None,
+        fault_hook: Optional[Callable[[int], None]] = None,
+        tp: int = 1,
+    ):
+        self.cfg = cfg
+        self.loop = loop
+        self.data_it = data_it
+        self.devices = list(devices if devices is not None else jax.devices())
+        self.fault_hook = fault_hook
+        self.tp = tp
+        self.metrics_log: List[Dict] = []
+        self.step_times: List[float] = []
+        self.n_recoveries = 0
+        self.straggler_events = 0
+        self._build(self.devices)
+
+    # -- (re)build mesh + step -------------------------------------------------
+    def _build(self, devices: List) -> None:
+        self.mesh = shrink_mesh(devices, prefer_model=self.tp)
+        self.rules = ShardingRules(self.mesh, self.cfg)
+        set_batch_axes(self.rules.dp_axes, self.rules.tp, self.rules.dp_size, mesh=self.mesh)
+        params = lm.init_params(self.cfg, jax.random.PRNGKey(0))
+        self.pspecs = self.rules.param_specs(params)
+        from repro.optim.adamw import AdamWState
+
+        opt = adamw_init(params)
+        ospecs = AdamWState(step=self.rules.replicated(), mu=self.pspecs,
+                            nu=jax.tree.map(lambda s: s, self.pspecs))
+        step_fn = build_train_step(self.cfg, lr=self.loop.lr, remat=self.loop.remat)
+        self._jit_step = jax.jit(
+            step_fn,
+            in_shardings=(self.pspecs, ospecs, None),
+            out_shardings=(self.pspecs, ospecs, None),
+            donate_argnums=(0, 1),
+        )
+        self.params = jax.device_put(params, self.pspecs)
+        self.opt = jax.device_put(opt, ospecs)
+        self.ckpt = AsyncCheckpointer(self.loop.ckpt_dir)
+
+    # -- recovery ---------------------------------------------------------------
+    def _recover(self, devices: List) -> int:
+        """Rebuild on surviving devices + restore latest checkpoint."""
+        self.n_recoveries += 1
+        self.ckpt.wait()
+        self._build(devices)
+        last = latest_step(self.loop.ckpt_dir)
+        if last is None:
+            return 0
+        _, state = restore_checkpoint(
+            self.loop.ckpt_dir,
+            like={"params": self.params, "opt": self.opt},
+            shardings={"params": self.pspecs, "opt": jax.tree.map(lambda _: None, self.opt)},
+        )
+        self.params = state["params"]
+        self.opt = jax.device_put(state["opt"])
+        return last
+
+    # -- main loop ----------------------------------------------------------------
+    def run(self) -> Dict[str, Any]:
+        start = latest_step(self.loop.ckpt_dir) or 0
+        if start:
+            _, state = restore_checkpoint(
+                self.loop.ckpt_dir, like={"params": self.params, "opt": self.opt}
+            )
+            self.params, self.opt = state["params"], state["opt"]
+        step = start
+        while step < self.loop.steps:
+            batch = next(self.data_it)
+            t0 = time.time()
+            try:
+                if self.fault_hook is not None:
+                    self.fault_hook(step)
+                with self.mesh:
+                    self.params, self.opt, metrics = self._jit_step(
+                        self.params, self.opt, batch
+                    )
+                metrics = {k: float(v) for k, v in metrics.items()
+                           if np.ndim(v) == 0}
+            except Exception as e:  # device failure / injected fault
+                survivors = self.devices  # single-host: all devices survive
+                resume_at = self._recover(survivors)
+                self.metrics_log.append(
+                    {"step": step, "event": "recovery", "error": str(e)[:200],
+                     "resumed_from": resume_at}
+                )
+                step = resume_at
+                continue
+            dt = time.time() - t0
+            self._watch_stragglers(dt, step)
+            step += 1
+            if step % self.loop.ckpt_every == 0 or step == self.loop.steps:
+                self.ckpt.save(step, {"params": self.params, "opt": self.opt})
+            if step % self.loop.log_every == 0 or step == self.loop.steps:
+                self.metrics_log.append({"step": step, "time_s": dt, **metrics})
+        self.ckpt.wait()
+        return {
+            "final_step": step,
+            "recoveries": self.n_recoveries,
+            "straggler_events": self.straggler_events,
+            "log": self.metrics_log,
+        }
+
+    def _watch_stragglers(self, dt: float, step: int) -> None:
+        self.step_times.append(dt)
+        hist = self.step_times[-50:]
+        if len(hist) >= 10:
+            mu, sd = float(np.mean(hist[:-1])), float(np.std(hist[:-1]) + 1e-9)
+            if (dt - mu) / sd > self.loop.straggler_zscore:
+                self.straggler_events += 1
+                self.metrics_log.append(
+                    {"step": step, "event": "straggler", "time_s": dt,
+                     "mean_s": mu}
+                )
+
+    def save_log(self, path: str) -> None:
+        p = pathlib.Path(path)
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text("\n".join(json.dumps(m) for m in self.metrics_log))

@@ -1,0 +1,74 @@
+"""Train-step builders.
+
+``build_train_step``      — one fused fwd/bwd/update step (dry-run target).
+``build_grad_accum_train_step`` — microbatch streaming (the paper's C2
+streaming applied to the token domain): ``lax.scan`` over microbatches keeps
+the activation footprint at 1/k while XLA overlaps each microbatch's
+reduce-scatter with the next microbatch's compute.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import lm
+from repro.optim import adamw_update
+
+
+def build_train_step(
+    cfg: ModelConfig,
+    lr: float = 3e-4,
+    remat: str = "nothing",
+) -> Callable:
+    """(params, opt_state, batch) → (params, opt_state, metrics)."""
+
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lm.loss_fn, has_aux=True
+        )(params, cfg, batch, remat)
+        params, opt_state, opt_metrics = adamw_update(grads, opt_state, params, lr=lr)
+        return params, opt_state, {"loss": loss, **metrics, **opt_metrics}
+
+    return train_step
+
+
+def build_grad_accum_train_step(
+    cfg: ModelConfig,
+    n_microbatches: int,
+    lr: float = 3e-4,
+    remat: str = "nothing",
+) -> Callable:
+    """Gradient accumulation over k microbatches (batch dim splits k-ways)."""
+
+    def train_step(params, opt_state, batch):
+        def split(x):
+            b = x.shape[0]
+            assert b % n_microbatches == 0, (b, n_microbatches)
+            return x.reshape((n_microbatches, b // n_microbatches) + x.shape[1:])
+
+        micro = jax.tree.map(split, batch)
+
+        def body(carry, mb):
+            gsum, lsum = carry
+            (loss, _), grads = jax.value_and_grad(lm.loss_fn, has_aux=True)(
+                params, cfg, mb, remat
+            )
+            gsum = jax.tree.map(
+                lambda a, g: a + g.astype(jnp.float32), gsum, grads
+            )
+            return (gsum, lsum + loss), None
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        unroll = n_microbatches if cfg.scan_unroll > 1 else 1
+        (gsum, lsum), _ = lax.scan(body, (zeros, jnp.zeros(())), micro,
+                                   unroll=unroll)
+        grads = jax.tree.map(lambda g: g / n_microbatches, gsum)
+        params, opt_state, opt_metrics = adamw_update(grads, opt_state, params, lr=lr)
+        return params, opt_state, {"loss": lsum / n_microbatches, **opt_metrics}
+
+    return train_step

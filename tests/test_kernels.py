@@ -1,0 +1,158 @@
+"""Per-kernel validation: Pallas (interpret mode on CPU) vs pure-jnp oracle,
+swept over shapes and dtypes."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import (
+    flash_attention as fak,
+    glcm as glcmk,
+    meanshift as msk,
+    pansharpen as psk,
+    ssd_scan as ssdk,
+)
+from repro.kernels import ref
+
+RNG = np.random.default_rng(42)
+
+
+# --------------------------------------------------------------------------
+# GLCM Haralick
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("shape", [(16, 16), (32, 24), (40, 56)])
+@pytest.mark.parametrize("radius,offset,levels", [(1, (0, 1), 4), (2, (1, 1), 8)])
+@pytest.mark.parametrize("dtype", [np.float32, np.uint16])
+def test_glcm_kernel_matches_ref(shape, radius, offset, levels, dtype):
+    halo = radius + max(abs(offset[0]), abs(offset[1]))
+    H, W = shape
+    x = RNG.uniform(0, 4096, size=(H + 2 * halo, W + 2 * halo)).astype(dtype)
+    got = glcmk.glcm_features(
+        jnp.asarray(x.astype(np.float32)), radius, offset, levels,
+        0.0, 4096.0, tile=(16, 16), interpret=True,
+    )
+    want = ref.glcm_features_ref(
+        jnp.asarray(x.astype(np.float32)), radius, offset, levels, 0.0, 4096.0
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+# --------------------------------------------------------------------------
+# Pansharpening
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("shape,bands", [((16, 16), 4), ((32, 48), 3), ((24, 20), 1)])
+@pytest.mark.parametrize("radius", [1, 2])
+def test_pansharpen_kernel_matches_ref(shape, bands, radius):
+    H, W = shape
+    xs = RNG.uniform(0, 4096, size=(H, W, bands)).astype(np.float32)
+    pan = RNG.uniform(1, 4096, size=(H + 2 * radius, W + 2 * radius, 1)).astype(
+        np.float32
+    )
+    got = psk.pansharpen(jnp.asarray(xs), jnp.asarray(pan), radius,
+                         tile=(16, 16), interpret=True)
+    want = ref.pansharpen_ref(jnp.asarray(xs), jnp.asarray(pan), radius)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-2)
+
+
+# --------------------------------------------------------------------------
+# Mean shift
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("hs,n_iter", [(1, 1), (2, 3)])
+@pytest.mark.parametrize("bands", [1, 3])
+def test_meanshift_kernel_matches_ref(hs, n_iter, bands):
+    H, W = 24, 20
+    x = RNG.uniform(0, 500, size=(H + 2 * hs, W + 2 * hs, bands)).astype(np.float32)
+    got = msk.meanshift(jnp.asarray(x), hs, 120.0, n_iter,
+                        tile=(8, 8), interpret=True)
+    want = ref.meanshift_ref(jnp.asarray(x), hs, 120.0, n_iter)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-2)
+
+
+# --------------------------------------------------------------------------
+# Flash attention
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("S,D,blocks", [(128, 32, (32, 32)), (256, 64, (64, 128))])
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_matches_ref(S, D, blocks, causal, dtype):
+    BH = 3
+    q = jnp.asarray(RNG.normal(size=(BH, S, D)), dtype)
+    k = jnp.asarray(RNG.normal(size=(BH, S, D)), dtype)
+    v = jnp.asarray(RNG.normal(size=(BH, S, D)), dtype)
+    got = fak.flash_attention(q, k, v, causal=causal,
+                              block_q=blocks[0], block_k=blocks[1],
+                              interpret=True)
+    want = ref.attention_ref(q, k, v, causal=causal)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-4
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=tol, atol=tol,
+    )
+
+
+# --------------------------------------------------------------------------
+# SSD intra-chunk
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("L,P,N", [(16, 8, 4), (32, 16, 8), (64, 32, 16)])
+def test_ssd_kernel_matches_ref(L, P, N):
+    BHC = 5
+    x = jnp.asarray(RNG.normal(size=(BHC, L, P)).astype(np.float32))
+    dt = jnp.asarray(RNG.uniform(0.01, 0.2, (BHC, L)).astype(np.float32))
+    loga = -dt * jnp.asarray(RNG.uniform(0.2, 1.0, (BHC, L)).astype(np.float32))
+    cum = jnp.cumsum(loga, axis=1)
+    B = jnp.asarray(RNG.normal(size=(BHC, L, N)).astype(np.float32))
+    C = jnp.asarray(RNG.normal(size=(BHC, L, N)).astype(np.float32))
+    y1, s1 = ssdk.ssd_intra_chunk(x, dt, cum, B, C, interpret=True)
+    y2, s2 = ref.ssd_intra_ref(x, dt, cum, B, C)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=2e-4, atol=2e-4)
+
+
+def test_ssd_kernel_composes_with_chunked_scan():
+    """Kernel output + jnp inter-chunk recurrence == full SSD reference."""
+    from repro.models.ssm import ssd_reference
+
+    Bz, S, H, P, N, Lc = 2, 64, 2, 8, 4, 16
+    x = jnp.asarray(RNG.normal(size=(Bz, S, H, P)).astype(np.float32))
+    dt = jnp.asarray(RNG.uniform(0.01, 0.2, (Bz, S, H)).astype(np.float32))
+    A = jnp.asarray(RNG.uniform(-1.5, -0.2, (H,)).astype(np.float32))
+    Bm = jnp.asarray(RNG.normal(size=(Bz, S, 1, N)).astype(np.float32))
+    Cm = jnp.asarray(RNG.normal(size=(Bz, S, 1, N)).astype(np.float32))
+    D = jnp.asarray(RNG.normal(size=(H,)).astype(np.float32))
+
+    # kernel path: reshape to (B·H·nc, L, ·) cells
+    nc = S // Lc
+    loga = dt * A[None, None, :]
+    cum = jnp.cumsum(loga.reshape(Bz, nc, Lc, H), axis=2)
+    xc = x.reshape(Bz, nc, Lc, H, P)
+    dtc = dt.reshape(Bz, nc, Lc, H)
+    Bc = jnp.repeat(Bm, H, axis=2).reshape(Bz, nc, Lc, H, N)
+    Cc = jnp.repeat(Cm, H, axis=2).reshape(Bz, nc, Lc, H, N)
+
+    def cells(a, feat):  # (B,nc,L,H,·) → (B·H·nc, L, ·)
+        a = jnp.moveaxis(a, 3, 1)  # B, H, nc, L, ·
+        return a.reshape((Bz * H * nc, Lc) + feat)
+
+    y_i, s_c = ssdk.ssd_intra_chunk(
+        cells(xc, (P,)), cells(dtc, ()), cells(cum, ()),
+        cells(Bc, (N,)), cells(Cc, (N,)), interpret=True,
+    )
+    y_i = y_i.reshape(Bz, H, nc, Lc, P)
+    s_c = s_c.reshape(Bz, H, nc, N, P)
+
+    # inter-chunk recurrence in jnp
+    chunk_decay = jnp.exp(cum[:, :, -1, :])  # (B,nc,H)
+    prev = jnp.zeros((Bz, H, N, P))
+    y_total = []
+    for c in range(nc):
+        yc = y_i[:, :, c]  # (B,H,L,P)
+        cw = Cc[:, c] * jnp.exp(cum[:, c])[..., None]  # (B,L,H,N)
+        y_inter = jnp.einsum("blhn,bhnp->bhlp", cw, prev)
+        y_total.append(yc + y_inter)
+        prev = prev * chunk_decay[:, c][..., None, None] + s_c[:, :, c]
+    y = jnp.stack(y_total, axis=2).reshape(Bz, H, S, P).transpose(0, 2, 1, 3)
+    y = y + D[None, None, :, None] * x
+    want = ssd_reference(x, dt, A, Bm, Cm, D)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(want), rtol=3e-4, atol=3e-4)

@@ -1,0 +1,73 @@
+"""The paper's seven pipelines: streamed/tiled execution == whole-image
+oracle (region independence, §II.C.1) on synthetic Spot6-like scenes."""
+import numpy as np
+import pytest
+
+from repro import pipelines as PP
+from repro.core import StreamingExecutor, StripeSplitter, TileSplitter
+from repro.raster import SyntheticScene, make_spot6_pair
+
+
+def _src(rows=64, cols=48):
+    return SyntheticScene(rows, cols, bands=4, dtype=np.float32)
+
+
+CASES = {
+    "P1_ortho": (lambda: PP.p1_orthorectification(_src()), 1e-3),
+    "P2_textures": (lambda: PP.p2_textures(_src()), 1e-3),
+    "P3_pansharpen": (lambda: PP.p3_pansharpening(*make_spot6_pair(16, 12)), 1e-3),
+    "P4_classify": (lambda: PP.p4_classification(_src()), 0.0),
+    "P5_meanshift": (
+        lambda: PP.p5_meanshift(_src(48, 40), hs=2, n_iter=2), 1e-3),
+    "P6_convert": (lambda: PP.p6_conversion(_src()), 1.0),
+    "P7_resample": (lambda: PP.p7_resampling(_src(32, 24)), 1e-3),
+}
+
+
+@pytest.mark.parametrize("name", list(CASES))
+def test_pipeline_streamed_equals_whole(name):
+    build, atol = CASES[name]
+    p, m = build()
+    info = p.info(m)
+    whole = np.asarray(p.pull(m, info.full_region)).astype(np.float64)
+
+    p2, m2 = build()
+    StreamingExecutor(p2, m2, StripeSplitter(n_splits=5)).run()
+    np.testing.assert_allclose(m2.result.astype(np.float64), whole,
+                               rtol=1e-4, atol=atol)
+
+    p3, m3 = build()
+    StreamingExecutor(p3, m3, TileSplitter(13, 17)).run()
+    np.testing.assert_allclose(m3.result.astype(np.float64), whole,
+                               rtol=1e-4, atol=atol)
+
+
+def test_p4_classifier_learns_labels():
+    """The trained forest reproduces the rule-based labels well above chance."""
+    from repro.filters import train_forest, forest_predict
+    import numpy as np
+
+    rng = np.random.default_rng(0)
+    X = rng.normal(size=(1500, 4)).astype(np.float32)
+    mix = X @ np.linspace(1.0, 2.0, 4)
+    edges = np.quantile(mix, [0.25, 0.5, 0.75])
+    y = np.digitize(mix, edges)
+    forest = train_forest(X[:1000], y[:1000], n_trees=8, max_depth=8)
+    pred = np.asarray(
+        forest_predict(forest.stacked(), forest.n_classes, forest.max_depth,
+                       X[1000:])
+    )
+    acc = (pred == y[1000:]).mean()
+    assert acc > 0.7, acc  # 4-class chance = 0.25
+
+
+def test_p2_feature_ranges():
+    """Haralick sanity: energy∈(0,1], entropy≥0, |corr|≤1."""
+    p, m = PP.p2_textures(_src(40, 32))
+    out = np.asarray(p.pull(m, p.info(m).full_region))
+    energy, entropy, contrast, homog, corr = np.moveaxis(out, -1, 0)
+    assert (energy > 0).all() and (energy <= 1 + 1e-5).all()
+    assert (entropy >= -1e-5).all()
+    assert (contrast >= -1e-5).all()
+    assert (homog > 0).all() and (homog <= 1 + 1e-5).all()
+    assert (np.abs(corr) <= 1 + 1e-4).all()

@@ -1,0 +1,53 @@
+"""Property tests: region algebra invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ImageRegion, whole
+
+regions = st.builds(
+    ImageRegion,
+    st.tuples(st.integers(-50, 50), st.integers(-50, 50)),
+    st.tuples(st.integers(0, 60), st.integers(0, 60)),
+)
+
+
+@given(regions, regions)
+def test_intersect_commutative(a, b):
+    assert a.intersect(b) == b.intersect(a)
+
+
+@given(regions, regions)
+def test_intersect_contained(a, b):
+    c = a.intersect(b)
+    if not c.is_empty():
+        assert a.contains(c) and b.contains(c)
+
+
+@given(regions, st.integers(0, 8), st.integers(0, 8))
+def test_pad_clamp_roundtrip(r, pr, pc):
+    if r.is_empty():
+        return
+    padded = r.pad(pr, pc)
+    assert padded.contains(r)
+    assert padded.clamp(r) == r  # clamping back to the original recovers it
+
+
+@given(regions, regions)
+def test_union_bbox_contains_both(a, b):
+    u = a.union_bbox(b)
+    assert u.contains(a) and u.contains(b)
+
+
+@given(regions)
+def test_relative_roundtrip(r):
+    outer = r.pad(3)
+    rel = r.relative_to(outer)
+    assert rel.shift(outer.row0, outer.col0) == r
+
+
+@given(st.integers(1, 40), st.integers(1, 40))
+def test_whole_slices(rows, cols):
+    r = whole(rows, cols)
+    arr = np.zeros((rows, cols))
+    rs, cs = r.slices()
+    assert arr[rs, cs].shape == (rows, cols)

@@ -1,0 +1,60 @@
+"""Load-balancing schedules: partition correctness + balance quality."""
+import numpy as np
+from hypothesis import given, strategies as st
+
+from repro.core import (
+    ImageRegion,
+    cost_weighted_static_schedule,
+    lpt_schedule,
+    makespan,
+    static_schedule,
+)
+
+
+def _regions(n):
+    return [ImageRegion((i * 10, 0), (10, 100)) for i in range(n)]
+
+
+@given(st.integers(1, 40), st.integers(1, 8))
+def test_static_partitions_all(n, w):
+    sched = static_schedule(_regions(n), w)
+    flat = sorted(i for lst in sched for i in lst)
+    assert flat == list(range(n))
+    # contiguity (required by the strip-adjacent parallel writer)
+    for lst in sched:
+        assert lst == list(range(lst[0], lst[0] + len(lst))) if lst else True
+
+
+@given(st.integers(1, 40), st.integers(1, 8), st.integers(0, 10**6))
+def test_lpt_partitions_all(n, w, seed):
+    rng = np.random.default_rng(seed)
+    costs = rng.uniform(0.1, 10.0, size=n)
+    sched = lpt_schedule(_regions(n), w, lambda r: costs[r.row0 // 10])
+    flat = sorted(i for lst in sched for i in lst)
+    assert flat == list(range(n))
+
+
+def test_lpt_beats_static_on_skewed_costs():
+    """The paper's P5 (meanshift) motivates this: non-constant per-region cost
+    (§IV.C).  LPT must win on a pathological skew."""
+    n, w = 16, 4
+    regions = _regions(n)
+    costs = np.array([100.0] + [1.0] * (n - 1))
+    cost_fn = lambda r: costs[r.row0 // 10]
+    ms_static = makespan(static_schedule(regions, w), regions, cost_fn)
+    ms_lpt = makespan(lpt_schedule(regions, w, cost_fn), regions, cost_fn)
+    assert ms_lpt <= ms_static
+    ms_cw = makespan(
+        cost_weighted_static_schedule(regions, w, cost_fn), regions, cost_fn
+    )
+    assert ms_cw <= ms_static  # contiguous but cost-aware
+
+
+@given(st.integers(2, 30), st.integers(2, 6))
+def test_cost_weighted_contiguous(n, w):
+    sched = cost_weighted_static_schedule(_regions(n), w, lambda r: 1.0)
+    flat = [i for lst in sched for i in lst]
+    assert flat == list(range(n))
+    for lst in sched:
+        if lst:
+            assert lst == list(range(lst[0], lst[0] + len(lst)))

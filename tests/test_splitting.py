@@ -1,0 +1,63 @@
+"""Property tests: every splitter tiles the domain exactly (paper §II.B/D)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    AutoSplitter,
+    ImageInfo,
+    StripeSplitter,
+    TileSplitter,
+    VMEMTileSplitter,
+    whole,
+)
+
+
+def assert_exact_cover(regions, full):
+    cover = np.zeros((full.rows, full.cols), np.int32)
+    for r in regions:
+        assert full.contains(r), (r, full)
+        rs, cs = r.slices()
+        cover[rs, cs] += 1
+    assert (cover == 1).all(), "regions must cover every pixel exactly once"
+
+
+@given(st.integers(1, 80), st.integers(1, 80), st.integers(1, 12))
+def test_stripe_splits_cover(rows, cols, n):
+    info = ImageInfo(rows, cols, 3)
+    full = whole(rows, cols)
+    assert_exact_cover(StripeSplitter(n_splits=n).split(full, info), full)
+
+
+@given(st.integers(1, 80), st.integers(1, 80), st.integers(1, 20), st.integers(1, 20))
+def test_tile_splits_cover(rows, cols, th, tw):
+    info = ImageInfo(rows, cols, 1)
+    full = whole(rows, cols)
+    assert_exact_cover(TileSplitter(th, tw).split(full, info), full)
+
+
+@given(st.integers(1, 100), st.integers(1, 100), st.integers(64, 10_000),
+       st.integers(1, 8))
+def test_auto_splits_cover_and_fit(rows, cols, budget, workers):
+    info = ImageInfo(rows, cols, 2, np.float32)
+    full = whole(rows, cols)
+    regions = AutoSplitter(budget, workers).split(full, info)
+    assert_exact_cover(regions, full)
+    # memory budget respected whenever a single row already fits
+    if cols * info.bytes_per_pixel <= budget:
+        for r in regions:
+            assert r.num_pixels * info.bytes_per_pixel <= budget + cols * info.bytes_per_pixel
+
+
+def test_auto_split_count_multiple_of_workers():
+    info = ImageInfo(1000, 100, 1, np.float32)
+    regions = AutoSplitter(40_000, n_workers=3).split(whole(1000, 100), info)
+    assert len(regions) % 3 == 0
+
+
+def test_vmem_tiles_aligned():
+    info = ImageInfo(1000, 1000, 4, np.float32)
+    regions = VMEMTileSplitter(2**20, align=128).split(whole(1000, 1000), info)
+    assert_exact_cover(regions, whole(1000, 1000))
+    interior = [r for r in regions if r.row1 < 1000 and r.col1 < 1000]
+    assert all(r.rows % 128 == 0 and r.cols % 128 == 0 for r in interior)

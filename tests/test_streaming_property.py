@@ -1,0 +1,118 @@
+"""The paper's central invariant (§II.C.1): region-independent pipelines
+produce identical pixels under ANY splitting — streamed == whole-image."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    Filter,
+    Pipeline,
+    StreamingExecutor,
+    StripeSplitter,
+    TileSplitter,
+)
+from repro.filters import BandStatistics
+from repro.raster import MemoryMapper, SyntheticScene
+
+
+class BoxMean(Filter):
+    def __init__(self, radius):
+        super().__init__()
+        self.radius = radius
+
+    def requested_region(self, out_region, *infos):
+        return (out_region.pad(self.radius),)
+
+    def generate(self, out_region, x):
+        r = self.radius
+        k = 2 * r + 1
+        c = jnp.cumsum(x, axis=0)
+        c = jnp.concatenate([c[k - 1 : k], c[k:] - c[:-k]], axis=0)
+        c2 = jnp.cumsum(c, axis=1)
+        c2 = jnp.concatenate([c2[:, k - 1 : k], c2[:, k:] - c2[:, :-k]], axis=1)
+        return c2 / (k * k)
+
+
+def build(rows, cols, radius, depth):
+    p = Pipeline()
+    node = p.add(SyntheticScene(rows, cols, bands=2, dtype=np.float32))
+    for _ in range(depth):
+        node = p.add(BoxMean(radius), [node])
+    m = p.add(MemoryMapper(), [node])
+    return p, m
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    rows=st.integers(16, 60),
+    cols=st.integers(16, 60),
+    radius=st.integers(0, 3),
+    depth=st.integers(1, 3),
+    n_splits=st.integers(2, 9),
+)
+def test_streamed_equals_whole_stripes(rows, cols, radius, depth, n_splits):
+    p, m = build(rows, cols, radius, depth)
+    whole_img = np.asarray(p.pull(m, p.info(m).full_region))
+    p2, m2 = build(rows, cols, radius, depth)
+    StreamingExecutor(p2, m2, StripeSplitter(n_splits=n_splits)).run()
+    np.testing.assert_allclose(m2.result, whole_img, rtol=3e-5, atol=1e-3)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    rows=st.integers(16, 50),
+    cols=st.integers(16, 50),
+    radius=st.integers(0, 2),
+    th=st.integers(5, 20),
+    tw=st.integers(5, 20),
+)
+def test_streamed_equals_whole_tiles(rows, cols, radius, th, tw):
+    p, m = build(rows, cols, radius, 2)
+    whole_img = np.asarray(p.pull(m, p.info(m).full_region))
+    p2, m2 = build(rows, cols, radius, 2)
+    StreamingExecutor(p2, m2, TileSplitter(th, tw)).run()
+    np.testing.assert_allclose(m2.result, whole_img, rtol=3e-5, atol=1e-3)
+
+
+@settings(max_examples=8, deadline=None)
+@given(n_splits=st.integers(1, 10), rows=st.integers(20, 60))
+def test_persistent_stats_split_invariant(n_splits, rows):
+    """Persistent aggregation == global statistics, any split count."""
+    def mk():
+        p = Pipeline()
+        s = p.add(SyntheticScene(rows, 30, bands=3, dtype=np.float32))
+        st_ = p.add(BandStatistics(bands=3), [s])
+        m = p.add(MemoryMapper(), [st_])
+        return p, m
+
+    p, m = mk()
+    img = np.asarray(p.pull(m, p.info(m).full_region))
+    p2, m2 = mk()
+    res = StreamingExecutor(p2, m2, StripeSplitter(n_splits=n_splits)).run()
+    stats = res.persistent_results["BandStatistics"]
+    np.testing.assert_allclose(
+        np.asarray(stats["mean"]), img.reshape(-1, 3).mean(0), rtol=1e-4
+    )
+    np.testing.assert_allclose(
+        np.asarray(stats["max"]), img.reshape(-1, 3).max(0), rtol=1e-5
+    )
+    np.testing.assert_allclose(
+        np.asarray(stats["std"]), img.reshape(-1, 3).std(0), rtol=1e-3, atol=1e-3
+    )
+
+
+def test_worker_partition_processes_everything():
+    """Multi-worker static schedule: the union of worker outputs is the image."""
+    rows, cols, W = 40, 30, 3
+    acc = np.zeros((rows, cols, 2), np.float32)
+    ref_p, ref_m = build(rows, cols, 1, 1)
+    whole_img = np.asarray(ref_p.pull(ref_m, ref_p.info(ref_m).full_region))
+    for w in range(W):
+        p, m = build(rows, cols, 1, 1)
+        StreamingExecutor(
+            p, m, StripeSplitter(n_splits=6), worker=w, n_workers=W
+        ).run()
+        # each worker writes only its strips into its own mapper buffer
+        acc += m.result
+    np.testing.assert_allclose(acc, whole_img, rtol=1e-5, atol=1e-4)
