@@ -14,7 +14,7 @@ import sys
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default="io,pipelines,balancing,kernels,roofline")
+    ap.add_argument("--only", default="io,streaming,pipelines,balancing,kernels,roofline")
     args = ap.parse_args()
     wanted = set(args.only.split(","))
 
@@ -23,6 +23,10 @@ def main() -> None:
         from benchmarks import bench_io
 
         rows += bench_io.run()
+    if "streaming" in wanted:
+        from benchmarks import bench_streaming
+
+        rows += bench_streaming.run()
     if "pipelines" in wanted:
         from benchmarks import bench_pipelines
 

@@ -27,9 +27,18 @@ from repro.core.scheduling import (
     static_schedule,
     cost_weighted_static_schedule,
     lpt_schedule,
+    work_stealing_schedule,
+    WorkStealingQueue,
     makespan,
 )
-from repro.core.streaming import StreamingExecutor, StreamResult, execute
+from repro.core.streaming import (
+    CacheStats,
+    PlanCache,
+    StreamingExecutor,
+    StreamResult,
+    execute,
+    run_pool,
+)
 from repro.core.orchestrator import Orchestrator, Stage, StageResult
 from repro.core.parallel import (
     ParallelExecutor,
@@ -60,10 +69,15 @@ __all__ = [
     "static_schedule",
     "cost_weighted_static_schedule",
     "lpt_schedule",
+    "work_stealing_schedule",
+    "WorkStealingQueue",
     "makespan",
+    "CacheStats",
+    "PlanCache",
     "StreamingExecutor",
     "StreamResult",
     "execute",
+    "run_pool",
     "Orchestrator",
     "Stage",
     "StageResult",

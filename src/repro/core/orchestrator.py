@@ -23,7 +23,7 @@ from typing import Callable, Dict, List, Optional, Sequence
 from repro.core.pipeline import Pipeline
 from repro.core.process_object import Mapper
 from repro.core.splitting import Splitter, StripeSplitter
-from repro.core.streaming import StreamingExecutor
+from repro.core.streaming import CacheStats, run_pool
 
 
 @dataclasses.dataclass
@@ -33,6 +33,10 @@ class Stage:
     ``build(input_paths: dict[name, path], output_path) -> (Pipeline, Mapper)``
     wires the stage graph, reading its inputs from the given RTIF paths and
     terminating in a writer at ``output_path``.
+
+    ``scheduler`` picks how the stage's ``n_workers`` threads share regions:
+    ``"work_stealing"`` (default — one shared queue, idle workers steal),
+    ``"static"`` or ``"lpt"`` (precomputed slices, still run concurrently).
     """
 
     name: str
@@ -40,7 +44,8 @@ class Stage:
     inputs: Sequence[str] = ()  # names of upstream stages
     n_workers: int = 1
     splitter: Optional[Splitter] = None
-    scheduler: str = "static"
+    scheduler: str = "work_stealing"
+    use_jit: bool = True
 
 
 @dataclasses.dataclass
@@ -49,6 +54,7 @@ class StageResult:
     path: str
     seconds: float
     regions: int
+    cache_stats: Optional[CacheStats] = None
 
 
 class Orchestrator:
@@ -78,21 +84,21 @@ class Orchestrator:
                 n_splits=max(4, stage.n_workers * 4)
             )
             t0 = time.time()
-            total_regions = 0
-            # every worker of the stage runs its share of the static/LPT
-            # schedule (single host here: sequentially; on a cluster each
-            # rank executes its own slice — same schedule math)
-            for w in range(stage.n_workers):
-                res = StreamingExecutor(
-                    pipeline, mapper, splitter,
-                    worker=w, n_workers=stage.n_workers,
-                    scheduler=stage.scheduler,
-                ).run()
-                total_regions += res.regions_processed
+            # the stage's workers run concurrently against one shared region
+            # queue (work stealing) or their schedule slices — run_pool gives
+            # them one shared PlanCache, so a uniform split compiles once
+            res = run_pool(
+                pipeline, mapper, splitter,
+                n_workers=stage.n_workers,
+                scheduler=stage.scheduler,
+                use_jit=stage.use_jit,
+            )
             dt = time.time() - t0
             paths[stage.name] = out_path
-            results[stage.name] = StageResult(stage.name, out_path, dt, total_regions)
+            results[stage.name] = StageResult(
+                stage.name, out_path, dt, res.regions_processed, res.cache_stats
+            )
             if verbose:
-                print(f"[orchestrator] {stage.name}: {total_regions} regions "
-                      f"in {dt:.2f}s → {out_path}")
+                print(f"[orchestrator] {stage.name}: {res.regions_processed} "
+                      f"regions in {dt:.2f}s → {out_path}")
         return results

@@ -9,6 +9,18 @@
     pixels.  This is what the shard_map parallel driver partitions, and what
     ``jax.jit`` compiles for the streaming driver's hot loop.
 
+Plans are *canonical*: every region-dependent quantity that XLA must treat as
+static (array shapes, boundary-pad widths, graph structure) is folded into
+``PullPlan.signature``, while absolute coordinates consumed by
+``needs_origin`` filters are threaded through the compiled function as traced
+scalar arguments.  Two regions with equal signatures (e.g. all interior
+stripes of a uniform split) can therefore share one compiled function — the
+streaming engine's :class:`~repro.core.streaming.PlanCache` keys on exactly
+this.  Persistent-filter state is threaded through the pure function
+(``fn(arrays, pstates, origins) -> (pixels, new_pstates)``), so pipelines
+containing :class:`PersistentFilter` nodes compile instead of falling back to
+the eager pull.
+
 Border semantics: at *every* producer→consumer edge, the consumer's request is
 clamped against the producer's largest possible region and edge-replicated
 back out (ITK boundary condition), so requests may safely spill over borders.
@@ -137,17 +149,56 @@ class Pipeline:
 
     # -- symbolic pull: extract (source reads, pure function) ------------------
     def compile_pull(self, node: ProcessObject, out_region: ImageRegion) -> "PullPlan":
-        """Build a :class:`PullPlan` whose ``fn`` maps source arrays (covering
-        the plan's clamped source regions, in plan order) to the pixels of
-        ``node`` over ``out_region``.  ``fn`` is pure jax and jit-able."""
+        """Build a canonical :class:`PullPlan` for ``node`` over ``out_region``.
+
+        ``canonical_fn(arrays, pstates, origins)`` maps source arrays (covering
+        the plan's clamped source regions, in plan order), a persistent-state
+        dict and the plan's dynamic origin scalars to
+        ``(pixels, new_pstates)``.  Absolute coordinates of ``needs_origin``
+        nodes are *not* baked in — they are read from ``origins`` so one
+        compiled function serves every region with the same ``signature``."""
         infos = self.update_information()
         reads: List[Tuple[Source, ImageRegion, ImageRegion]] = []
         read_index: Dict[Tuple[int, ImageRegion], int] = {}
-        steps: List[Tuple] = []  # closure program, built by recursion
+        origin_values: List[int] = []
+        sig: List[Tuple] = []  # canonical step records, built by recursion
+        persistent: List[PersistentFilter] = []
+        built: Dict[Tuple[int, ImageRegion], Tuple[int, Callable]] = {}
+
+        def dyn(value: int) -> int:
+            """Register a dynamic (traced) origin scalar; returns its slot."""
+            origin_values.append(int(value))
+            return len(origin_values) - 1
+
+        def memoize(key, fn):
+            # one evaluation per distinct (node, region) request per call —
+            # mirrors the eager pull's request cache (and keeps persistent
+            # accumulation from double-counting diamond fan-in)
+            def run(arrays, origins, ctx, _key=key, _fn=fn):
+                if _key in ctx["memo"]:
+                    return ctx["memo"][_key]
+                out = _fn(arrays, origins, ctx)
+                ctx["memo"][_key] = out
+                return out
+
+            return run
 
         def build(n: ProcessObject, region: ImageRegion) -> Callable:
+            key = (id(n), region)
+            if key in built:
+                ordinal, fn = built[key]
+                sig.append(("ref", ordinal))
+                return fn
+            ordinal = len(built)
             own_info = infos[id(n)]
             clamped = region.clamp(own_info.full_region)
+            # boundary-pad widths are baked into the trace → part of the key
+            pads = (
+                clamped.row0 - region.row0,
+                region.row1 - clamped.row1,
+                clamped.col0 - region.col0,
+                region.col1 - clamped.col1,
+            )
             ups = self._inputs[id(n)]
             if not ups:
                 k = (id(n), clamped)
@@ -155,48 +206,121 @@ class Pipeline:
                     read_index[k] = len(reads)
                     reads.append((n, clamped, region))  # type: ignore[arg-type]
                 idx = read_index[k]
+                sig.append(
+                    ("read", id(n), idx, clamped.size, pads,
+                     np.dtype(own_info.dtype).str, own_info.bands)
+                )
 
-                def run_source(arrays, _idx=idx, _clamped=clamped, _region=region):
+                def run_source(arrays, origins, ctx, _idx=idx,
+                               _clamped=clamped, _region=region):
                     return boundary_pad(arrays[_idx], _clamped, _region)
 
-                return run_source
+                fn = memoize(key, run_source)
+                built[key] = (ordinal, fn)
+                return fn
 
             in_infos = [infos[id(u)] for u in ups]
             reqs = n.requested_region(clamped, *in_infos)
             child_fns = [build(u, r) for u, r in zip(ups, reqs)]
+            origin_aware = bool(getattr(n, "needs_origin", False))
+            persist = isinstance(n, PersistentFilter)
+            if persist and n not in persistent:
+                persistent.append(n)
+            oi = (dyn(clamped.row0), dyn(clamped.col0)) if origin_aware else None
+            ii = (
+                tuple((dyn(r.row0), dyn(r.col0)) for r in reqs)
+                if origin_aware
+                else None
+            )
+            sig.append(
+                ("node", id(n), clamped.size, pads, origin_aware, persist,
+                 n.plan_key(clamped))
+            )
 
-            def run_node(arrays, _n=n, _clamped=clamped, _region=region,
-                         _fns=child_fns, _reqs=reqs):
-                ins = [f(arrays) for f in _fns]
-                if getattr(_n, "needs_origin", False):
+            def run_node(arrays, origins, ctx, _n=n, _clamped=clamped,
+                         _region=region, _fns=child_fns, _oi=oi, _ii=ii,
+                         _persist=persist):
+                ins = [f(arrays, origins, ctx) for f in _fns]
+                if _persist:
+                    ctx["pstates"][_n.name] = _n.accumulate(
+                        ctx["pstates"][_n.name], _clamped, *ins
+                    )
+                if _oi is not None:
                     out = _n.generate(
                         _clamped,
                         *ins,
-                        origin=_clamped.index,
-                        input_origins=tuple(r.index for r in _reqs),
+                        origin=(origins[_oi[0]], origins[_oi[1]]),
+                        input_origins=tuple(
+                            (origins[a], origins[b]) for a, b in _ii
+                        ),
                     )
                 else:
                     out = _n.generate(_clamped, *ins)
                 return boundary_pad(out, _clamped, _region)
 
-            return run_node
+            fn = memoize(key, run_node)
+            built[key] = (ordinal, fn)
+            return fn
 
-        fn = build(node, out_region)
-        return PullPlan(reads=reads, fn=fn, out_region=out_region)
+        root = build(node, out_region)
+        persistent_nodes = list(persistent)
+
+        def canonical_fn(arrays, pstates, origins):
+            ctx = {"pstates": dict(pstates), "memo": {}}
+            out = root(arrays, origins, ctx)
+            return out, ctx["pstates"]
+
+        static_origins = tuple(origin_values)
+
+        def legacy_fn(arrays, _origins=static_origins):
+            # seed-compatible entry point: origins baked in as constants
+            states = {p.name: p.reset() for p in persistent_nodes}
+            out, _ = canonical_fn(arrays, states, _origins)
+            return out
+
+        return PullPlan(
+            reads=reads,
+            fn=legacy_fn,
+            out_region=out_region,
+            canonical_fn=canonical_fn,
+            signature=tuple(sig),
+            origin_values=static_origins,
+            persistent_nodes=persistent_nodes,
+        )
 
 
 @dataclasses.dataclass
 class PullPlan:
     """``reads``: list of (source, clamped_region, requested_region);
     ``fn(arrays)`` with arrays[i] covering reads[i]'s clamped region returns
-    the output pixels."""
+    the output pixels (origins baked in — the seed-compatible entry point).
+
+    ``canonical_fn(arrays, pstates, origins)`` is the cacheable form:
+    ``origins`` carries the absolute coordinates consumed by ``needs_origin``
+    nodes as traced scalars and ``pstates`` threads persistent-filter state,
+    so one jit of ``canonical_fn`` serves every region whose ``signature``
+    matches this plan's."""
 
     reads: List[Tuple[Source, ImageRegion, ImageRegion]]
     fn: Callable[[Sequence[jnp.ndarray]], jnp.ndarray]
     out_region: ImageRegion
+    canonical_fn: Optional[Callable] = None
+    signature: Tuple = ()
+    origin_values: Tuple[int, ...] = ()
+    persistent_nodes: List[PersistentFilter] = dataclasses.field(
+        default_factory=list
+    )
 
     def read_sources(self) -> List[jnp.ndarray]:
         return [s.generate(clamped) for s, clamped, _ in self.reads]
+
+    def origins(self) -> Tuple[np.int32, ...]:
+        """Per-region dynamic origin scalars, in canonical slot order.  Passed
+        as arrays so jit traces (not bakes) them."""
+        return tuple(np.int32(v) for v in self.origin_values)
+
+    def initial_pstates(self) -> Dict[str, Dict[str, jnp.ndarray]]:
+        return {p.name: p.reset() for p in self.persistent_nodes}
 
     def run(self) -> jnp.ndarray:
         return self.fn(self.read_sources())

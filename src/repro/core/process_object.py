@@ -130,6 +130,16 @@ class ProcessObject:
         """
         raise NotImplementedError
 
+    def plan_key(self, out_region: ImageRegion):
+        """Extra *static* data baked into this node's compiled trace, beyond
+        array shapes and boundary pads.  Canonical plans only share one
+        compiled function across regions whose plan keys match, so filters
+        whose ``generate`` depends on absolute coordinates through host-side
+        constants (e.g. a resampling phase) must return a hashable key here.
+        Translation-invariant filters return None; filters that can consume
+        *traced* absolute coordinates use ``needs_origin`` instead."""
+        return None
+
     def __repr__(self) -> str:
         return f"<{type(self).__name__} {self.name!r}>"
 
@@ -198,6 +208,14 @@ class PersistentFilter(Filter):
         *inputs: jnp.ndarray,
         mask: Optional[jnp.ndarray] = None,
     ) -> Dict[str, jnp.ndarray]:
+        """Fold one region's inputs into ``state``.
+
+        ``out_region`` is *canonical*: its shape is always correct, but under
+        the compiled drivers (plan cache, SPMD strip plan) its origin may be
+        that of another signature-equal region, baked in at trace time.
+        Accumulate from the input arrays only; a filter whose state really
+        depends on absolute coordinates must override ``plan_key`` to return
+        ``out_region.index`` so no two regions share a trace."""
         raise NotImplementedError
 
     def synthesize(self, state: Dict[str, jnp.ndarray]) -> Dict[str, jnp.ndarray]:
@@ -219,6 +237,11 @@ class Mapper(ProcessObject):
     produced region (possibly from several workers for parallel mappers), then
     ``end()``.
     """
+
+    #: True when ``consume`` may be called concurrently for disjoint regions
+    #: (MPI-IO-style writers, disjoint in-memory assembly).  The pool driver
+    #: serializes consume calls with a lock when this is False.
+    thread_safe: bool = False
 
     def begin(self, info: ImageInfo) -> None:
         pass

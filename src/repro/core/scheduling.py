@@ -3,13 +3,18 @@
 The paper's writer "has a static load balancing, meaning that each process has
 a fixed processing schedule" (§II.D) and names dynamic balancing as future
 work (§IV.C) for "algorithms running in a non-constant time on different image
-regions".  We implement the paper's static schedule plus two beyond-paper
-schedulers.
+regions".  We implement the paper's static schedule plus beyond-paper
+schedulers: cost-weighted static, LPT, and work stealing — the latter both as
+a simulated static assignment (``work_stealing_schedule``, for rank slicing
+and makespan analysis) and as a thread-safe runtime queue
+(:class:`WorkStealingQueue`, drained by ``run_pool``'s concurrent workers).
 """
 from __future__ import annotations
 
+import collections
 import heapq
-from typing import Callable, Dict, List, Sequence
+import threading
+from typing import Callable, Dict, List, Optional, Sequence
 
 from repro.core.region import ImageRegion
 
@@ -73,6 +78,76 @@ def lpt_schedule(
     for lst in out:
         lst.sort()
     return out
+
+
+def work_stealing_schedule(
+    regions: Sequence[ImageRegion],
+    n_workers: int,
+    cost_fn: Callable[[ImageRegion], float],
+) -> List[List[int]]:
+    """The static mirror of work stealing: greedy list scheduling in queue
+    order — each region goes to the worker that frees up first, which is the
+    assignment an idealized shared-queue run converges to.  Graham's bound
+    applies: makespan ≤ total/m + (1 − 1/m)·max_cost ≤ (2 − 1/m)·OPT."""
+    heap = [(0.0, w) for w in range(n_workers)]
+    heapq.heapify(heap)
+    out: List[List[int]] = [[] for _ in range(n_workers)]
+    for i, r in enumerate(regions):
+        load, w = heapq.heappop(heap)
+        out[w].append(i)
+        heapq.heappush(heap, (load + max(1e-12, float(cost_fn(r))), w))
+    return out
+
+
+class WorkStealingQueue:
+    """Thread-safe dynamic scheduler (the paper's §IV.C named future work).
+
+    Item indices are seeded across per-worker deques with the contiguous
+    static schedule (so when costs are uniform, workers keep the
+    strip-adjacent access pattern the parallel writer likes).  An owner pops
+    from the *front* of its own deque; a worker whose deque is empty steals
+    from the *tail* of the victim with the most remaining cost — tail
+    stealing preserves the victim's locality, front popping preserves the
+    thief's.  ``steals`` counts successful steals."""
+
+    def __init__(
+        self,
+        n_items: int,
+        n_workers: int,
+        costs: Optional[Sequence[float]] = None,
+    ):
+        if n_workers < 1:
+            raise ValueError("n_workers must be >= 1")
+        self._costs = (
+            [float(c) for c in costs] if costs is not None else [1.0] * n_items
+        )
+        if len(self._costs) != n_items:
+            raise ValueError("costs must have one entry per item")
+        seed = static_schedule(range(n_items), n_workers)  # type: ignore[arg-type]
+        self._deques = [collections.deque(idxs) for idxs in seed]
+        self._remaining = [sum(self._costs[i] for i in idxs) for idxs in seed]
+        self._lock = threading.Lock()
+        self.steals = 0
+
+    def take(self, worker: int) -> Optional[int]:
+        """Next item index for ``worker``; None when the whole queue is dry."""
+        with self._lock:
+            dq = self._deques[worker]
+            if dq:
+                i = dq.popleft()
+                self._remaining[worker] -= self._costs[i]
+                return i
+            victim = -1
+            best = 0.0
+            for w, other in enumerate(self._deques):
+                if other and (victim < 0 or self._remaining[w] > best):
+                    victim, best = w, self._remaining[w]
+            if victim < 0:
+                return None
+            i = self._deques[victim].pop()
+            self._remaining[victim] -= self._costs[i]
+            self.steals += 1
+            return i
 
 
 def makespan(

@@ -1,29 +1,182 @@
-"""Streaming executor (paper §II.B): pull the pipeline region by region.
+"""Streaming engine (paper §II.B): pull the pipeline region by region.
 
-The mapper picks a splitting strategy, then the executor processes regions on
-a bounded memory footprint.  ``worker`` / ``n_workers`` select this worker's
-slice of the static schedule, so the same driver runs standalone or as one
-rank of a host-level parallel run (e.g. one process per pod host feeding its
-devices).
+The mapper picks a splitting strategy, then the engine processes regions on a
+bounded memory footprint.  ``worker`` / ``n_workers`` select this worker's
+slice of the schedule, so the same driver runs standalone or as one rank of a
+host-level parallel run (e.g. one process per pod host feeding its devices).
 
-Per-region pulls are extracted with ``compile_pull`` and jit-compiled; plans
-are cached by (node, region size, origin parity) so uniform stripes compile
-once.
+Three layers make the hot loop run at hardware speed:
+
+  1. **Canonical plans** — ``Pipeline.compile_pull`` folds every
+     shape/boundary-static quantity into ``PullPlan.signature`` and threads
+     absolute coordinates (``needs_origin``) and persistent-filter state
+     through the pure function as traced arguments.
+  2. **PlanCache** — an explicit compiled-function registry keyed by plan
+     signature ``(node, region shape, boundary pads)``.  A uniform stripe
+     split compiles exactly once per distinct signature (interior stripes
+     share one entry; border stripes with different clamp/pad geometry get
+     their own).  Hit/miss/compile/eviction counts are surfaced in
+     ``StreamResult.cache_stats``.
+  3. **Async double buffering** — with ``prefetch=k``, source reads for the
+     next ``k`` regions run on a thread pool while the device computes the
+     current one, and ``mapper.consume`` is handed to a background writer
+     behind a bounded queue.  In-flight memory stays bounded at roughly
+     ``2·prefetch + 2`` region buffers (k read-ahead + one computing +
+     k + 1 queued writes), preserving the paper's memory-budget guarantee
+     with a constant factor.
+
+Pipelines containing :class:`PersistentFilter` nodes run through the compiled
+path too: state is carried across regions as
+``fn(arrays, pstates, origins) -> (pixels, new_pstates)``.
+
+The seed semantics stay reachable for A/B: ``use_jit=False`` is the eager
+pull, and ``cache=False`` restores the per-region re-jit behavior.
+
+``run_pool`` is the single-host concurrent driver: ``n_workers`` threads
+drain one shared :class:`~repro.core.scheduling.WorkStealingQueue` (or their
+static/LPT slices) against a shared :class:`PlanCache` — the dynamic load
+balancing the paper names as future work (§IV.C).
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
-from typing import Callable, Dict, List, Optional
+import queue
+import threading
+from concurrent.futures import ThreadPoolExecutor
+from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.pipeline import Pipeline
+from repro.core.pipeline import Pipeline, PullPlan
 from repro.core.process_object import Mapper, PersistentFilter
 from repro.core.region import ImageRegion
-from repro.core.scheduling import lpt_schedule, static_schedule
+from repro.core.scheduling import (
+    WorkStealingQueue,
+    lpt_schedule,
+    static_schedule,
+    work_stealing_schedule,
+)
 from repro.core.splitting import Splitter, StripeSplitter
+
+_SCHEDULERS = ("static", "lpt", "work_stealing")
+
+
+@dataclasses.dataclass
+class CacheStats:
+    """Counters for one :class:`PlanCache`.  ``compiles`` counts actual jax
+    traces (incremented from inside the traced body), so a value of 1 proves
+    a whole run retraced exactly once."""
+
+    compiles: int = 0
+    hits: int = 0
+    misses: int = 0
+    evictions: int = 0
+
+
+class _CompiledEntry:
+    """One jitted canonical function.  The first call is serialized so
+    concurrent pool workers can't race XLA into tracing the same signature
+    twice; afterwards calls are lock-free."""
+
+    def __init__(self, canonical_fn: Callable, stats: CacheStats):
+        def counted(arrays, pstates, origins):
+            stats.compiles += 1  # executes at trace time only
+            return canonical_fn(arrays, pstates, origins)
+
+        self._jitted = jax.jit(counted)
+        self._lock = threading.Lock()
+        self._primed = False
+
+    def __call__(self, arrays, pstates, origins):
+        if not self._primed:
+            with self._lock:
+                out = self._jitted(arrays, pstates, origins)
+                self._primed = True
+                return out
+        return self._jitted(arrays, pstates, origins)
+
+
+class PlanCache:
+    """Compiled-plan registry keyed by canonical plan signature.
+
+    Shareable across executors / pool workers / orchestrator stages (all
+    methods are thread-safe).  ``max_entries`` bounds the registry with LRU
+    eviction; evicted entries recompile on next use (counted in stats)."""
+
+    def __init__(self, max_entries: Optional[int] = None):
+        if max_entries is not None and max_entries < 1:
+            raise ValueError("max_entries must be >= 1")
+        self.max_entries = max_entries
+        self.stats = CacheStats()
+        self._entries: "collections.OrderedDict[Tuple, _CompiledEntry]" = (
+            collections.OrderedDict()
+        )
+        self._lock = threading.Lock()
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def compiled(self, plan: PullPlan) -> Callable:
+        """The compiled function for ``plan``'s signature (compiling lazily on
+        first call).  Plans with equal signatures share one entry."""
+        key = plan.signature
+        with self._lock:
+            entry = self._entries.get(key)
+            if entry is not None:
+                self.stats.hits += 1
+                self._entries.move_to_end(key)
+                return entry
+            self.stats.misses += 1
+            entry = _CompiledEntry(plan.canonical_fn, self.stats)
+            self._entries[key] = entry
+            if self.max_entries is not None and len(self._entries) > self.max_entries:
+                self._entries.popitem(last=False)
+                self.stats.evictions += 1
+            return entry
+
+
+class _WriteBehind:
+    """Hands ``consume`` to a background thread through a bounded queue (the
+    write-behind half of the double buffer).  On a consume error the thread
+    keeps draining so producers never deadlock; the error re-raises on the
+    producer side at the next ``put`` or at ``close``."""
+
+    _STOP = object()
+
+    def __init__(self, consume: Callable[[ImageRegion, np.ndarray], None], depth: int):
+        self._consume = consume
+        self._q: "queue.Queue" = queue.Queue(maxsize=max(1, depth))
+        self._error: Optional[BaseException] = None
+        self._thread = threading.Thread(
+            target=self._loop, name="write-behind", daemon=True
+        )
+        self._thread.start()
+
+    def _loop(self):
+        while True:
+            item = self._q.get()
+            if item is self._STOP:
+                return
+            if self._error is not None:
+                continue  # drain without consuming
+            try:
+                self._consume(*item)
+            except BaseException as e:  # noqa: BLE001 — must cross threads
+                self._error = e
+
+    def put(self, region: ImageRegion, data: np.ndarray) -> None:
+        if self._error is not None:
+            raise self._error
+        self._q.put((region, data))
+
+    def close(self) -> None:
+        self._q.put(self._STOP)
+        self._thread.join()
+        if self._error is not None:
+            raise self._error
 
 
 @dataclasses.dataclass
@@ -33,6 +186,8 @@ class StreamResult:
     persistent_results: Dict[str, Dict[str, jnp.ndarray]]
     #: per-region pixel outputs, only kept when ``keep_outputs=True``
     outputs: Optional[List[np.ndarray]] = None
+    #: plan-cache counters for this run (None on the eager / re-jit paths)
+    cache_stats: Optional[CacheStats] = None
 
 
 class StreamingExecutor:
@@ -46,8 +201,12 @@ class StreamingExecutor:
         scheduler: str = "static",
         cost_fn: Optional[Callable[[ImageRegion], float]] = None,
         use_jit: bool = True,
+        cache: bool = True,
+        plan_cache: Optional[PlanCache] = None,
+        prefetch: int = 2,
+        max_cached_plans: Optional[int] = None,
     ):
-        if scheduler not in ("static", "lpt"):
+        if scheduler not in _SCHEDULERS:
             raise ValueError(scheduler)
         self.pipeline = pipeline
         self.mapper = mapper
@@ -57,15 +216,30 @@ class StreamingExecutor:
         self.scheduler = scheduler
         self.cost_fn = cost_fn or (lambda r: float(r.num_pixels))
         self.use_jit = use_jit
+        self.cache = cache
+        # explicit None check: an empty PlanCache is falsy (it has __len__)
+        self.plan_cache = (
+            plan_cache if plan_cache is not None else PlanCache(max_cached_plans)
+        )
+        self.prefetch = max(0, int(prefetch))
 
     def my_regions(self) -> List[ImageRegion]:
         info = self.pipeline.info(self.mapper)
         regions = self.splitter.split(info.full_region, info)
         if self.scheduler == "static":
             sched = static_schedule(regions, self.n_workers)
-        else:
+        elif self.scheduler == "lpt":
             sched = lpt_schedule(regions, self.n_workers, self.cost_fn)
+        else:
+            sched = work_stealing_schedule(regions, self.n_workers, self.cost_fn)
         return [regions[i] for i in sched[self.worker]]
+
+    # -- the prefetch stage: host-side planning + source reads ----------------
+    def _prepare(self, region: ImageRegion):
+        plan = self.pipeline.compile_pull(self.mapper, region)
+        fn = self.plan_cache.compiled(plan)
+        arrays = plan.read_sources()
+        return plan, fn, arrays
 
     def run(self, keep_outputs: bool = False) -> StreamResult:
         pipeline, mapper = self.pipeline, self.mapper
@@ -81,20 +255,40 @@ class StreamingExecutor:
         outputs: List[np.ndarray] = []
         pixels = 0
         regions = self.my_regions()
-        for region in regions:
+        compiled_path = self.use_jit and self.cache
+
+        def compute(prep) -> np.ndarray:
+            nonlocal pstates
+            plan, fn, arrays = prep
+            out, pstates = fn(arrays, pstates, plan.origins())
+            return np.asarray(out)
+
+        def produce_sync(region: ImageRegion) -> np.ndarray:
+            if compiled_path:
+                return compute(self._prepare(region))
             if self.use_jit and not pipeline.persistent_nodes():
+                # cache=False A/B baseline: the seed's per-region re-jit
                 plan = pipeline.compile_pull(mapper, region)
-                arrays = plan.read_sources()
-                data = jax.jit(plan.fn)(arrays)
+                return np.asarray(jax.jit(plan.fn)(plan.read_sources()))
+            # eager pull; the hook observes every region exactly once
+            return np.asarray(pipeline.pull(mapper, region, persistent_hook=hook))
+
+        try:
+            if compiled_path and self.prefetch > 0 and len(regions) > 1:
+                pixels = self._run_async(regions, compute, outputs, keep_outputs)
             else:
-                # persistent accumulation runs through the eager pull so the
-                # hook observes every region exactly once
-                data = pipeline.pull(mapper, region, persistent_hook=hook)
-            data = np.asarray(data)
-            mapper.consume(region, data)
-            pixels += region.num_pixels
-            if keep_outputs:
-                outputs.append(data)
+                for region in regions:
+                    data = produce_sync(region)
+                    mapper.consume(region, data)
+                    pixels += region.num_pixels
+                    if keep_outputs:
+                        outputs.append(data)
+        except BaseException:
+            try:
+                mapper.end()  # release writer descriptors on the error path
+            except Exception:
+                pass
+            raise
 
         # paper's Synthesis: finalize persistent state after the region loop
         presults = {
@@ -106,14 +300,197 @@ class StreamingExecutor:
             pixels_processed=pixels,
             persistent_results=presults,
             outputs=outputs if keep_outputs else None,
+            cache_stats=self.plan_cache.stats if compiled_path else None,
         )
+
+    def _run_async(self, regions, compute, outputs, keep_outputs) -> int:
+        """Double-buffered loop: reads for region i+1..i+prefetch overlap the
+        device computing region i; writes trail behind on their own thread."""
+        depth = self.prefetch
+        pixels = 0
+        writer = _WriteBehind(self.mapper.consume, depth + 1)
+        pending: "collections.deque" = collections.deque()
+        nxt = 0
+        error: Optional[BaseException] = None
+        with ThreadPoolExecutor(
+            max_workers=depth, thread_name_prefix="prefetch"
+        ) as pool:
+
+            def fill():
+                nonlocal nxt
+                while nxt < len(regions) and len(pending) < depth:
+                    pending.append(
+                        (regions[nxt], pool.submit(self._prepare, regions[nxt]))
+                    )
+                    nxt += 1
+
+            try:
+                fill()
+                while pending:
+                    region, fut = pending.popleft()
+                    prep = fut.result()
+                    fill()  # keep the read window full while we compute
+                    data = compute(prep)
+                    pixels += region.num_pixels
+                    if keep_outputs:
+                        outputs.append(data)
+                    writer.put(region, data)
+            except BaseException as e:  # noqa: BLE001 — re-raised below
+                error = e
+            finally:
+                for _, fut in pending:
+                    fut.cancel()
+                try:
+                    writer.close()
+                except BaseException as e:  # noqa: BLE001
+                    if error is None:
+                        error = e
+        if error is not None:
+            raise error
+        return pixels
+
+
+def run_pool(
+    pipeline: Pipeline,
+    mapper: Mapper,
+    splitter: Optional[Splitter] = None,
+    *,
+    n_workers: int = 1,
+    scheduler: str = "work_stealing",
+    cost_fn: Optional[Callable[[ImageRegion], float]] = None,
+    use_jit: bool = True,
+    plan_cache: Optional[PlanCache] = None,
+    keep_outputs: bool = False,
+) -> StreamResult:
+    """Run one pipeline with ``n_workers`` concurrent threads on this host.
+
+    With ``scheduler="work_stealing"`` the workers drain one shared
+    :class:`WorkStealingQueue` (idle workers steal from the most-loaded
+    victim's tail); ``"static"`` / ``"lpt"`` give each worker its precomputed
+    slice but still run the slices concurrently.  All workers share one
+    :class:`PlanCache`, so a uniform split still compiles once.  Per-worker
+    persistent states are combined with the filters' reductions, then
+    synthesized once — the thread-level analogue of the paper's MPI
+    many-to-one Synthesis."""
+    if scheduler not in _SCHEDULERS:
+        raise ValueError(scheduler)
+    n_workers = max(1, int(n_workers))
+    info = pipeline.info(mapper)  # also primes the metadata cache (thread-shared)
+    splitter = splitter or StripeSplitter(n_splits=n_workers * 4)
+    regions = splitter.split(info.full_region, info)
+    cost = cost_fn or (lambda r: float(r.num_pixels))
+    cache = plan_cache if plan_cache is not None else PlanCache()
+
+    mapper.begin(info)
+    consume_lock = (
+        None if getattr(mapper, "thread_safe", False) else threading.Lock()
+    )
+
+    def consume(region, data):
+        if consume_lock is None:
+            mapper.consume(region, data)
+        else:
+            with consume_lock:
+                mapper.consume(region, data)
+
+    persistent = pipeline.persistent_nodes()
+    worker_states = [{p.name: p.reset() for p in persistent} for _ in range(n_workers)]
+    counts = [0] * n_workers
+    pixel_counts = [0] * n_workers
+    outputs_by_index: Optional[Dict[int, np.ndarray]] = {} if keep_outputs else None
+
+    if scheduler == "work_stealing":
+        wsq = WorkStealingQueue(
+            len(regions), n_workers, costs=[cost(r) for r in regions]
+        )
+
+        def indices(w):
+            while True:
+                i = wsq.take(w)
+                if i is None:
+                    return
+                yield i
+
+    else:
+        sched = (
+            static_schedule(regions, n_workers)
+            if scheduler == "static"
+            else lpt_schedule(regions, n_workers, cost)
+        )
+
+        def indices(w):
+            return iter(sched[w])
+
+    def work(w: int) -> None:
+        pstates = worker_states[w]
+
+        def hook(node, reg, inputs):
+            pstates[node.name] = node.accumulate(pstates[node.name], reg, *inputs)
+
+        for i in indices(w):
+            region = regions[i]
+            if use_jit:
+                plan = pipeline.compile_pull(mapper, region)
+                fn = cache.compiled(plan)
+                out, pstates = fn(plan.read_sources(), pstates, plan.origins())
+                data = np.asarray(out)
+            else:
+                data = np.asarray(
+                    pipeline.pull(mapper, region, persistent_hook=hook)
+                )
+            consume(region, data)
+            counts[w] += 1
+            pixel_counts[w] += region.num_pixels
+            if outputs_by_index is not None:
+                outputs_by_index[i] = data
+        worker_states[w] = pstates
+
+    try:
+        if n_workers == 1:
+            work(0)
+        else:
+            with ThreadPoolExecutor(
+                max_workers=n_workers, thread_name_prefix="pool"
+            ) as pool:
+                futs = [pool.submit(work, w) for w in range(n_workers)]
+                for f in futs:
+                    f.result()
+    except BaseException:
+        try:
+            mapper.end()  # release writer descriptors on the error path
+        except Exception:
+            pass
+        raise
+
+    combined = {p.name: worker_states[0][p.name] for p in persistent}
+    for states in worker_states[1:]:
+        for p in persistent:
+            combined[p.name] = p.combine_states(combined[p.name], states[p.name])
+    presults = {p.name: p.synthesize(combined[p.name]) for p in persistent}
+    mapper.end()
+    return StreamResult(
+        regions_processed=sum(counts),
+        pixels_processed=sum(pixel_counts),
+        persistent_results=presults,
+        outputs=(
+            [outputs_by_index[i] for i in sorted(outputs_by_index)]
+            if outputs_by_index is not None
+            else None
+        ),
+        cache_stats=cache.stats if use_jit else None,
+    )
 
 
 def execute(
     pipeline: Pipeline,
     mapper: Mapper,
     splitter: Optional[Splitter] = None,
-    **kw,
+    keep_outputs: bool = False,
+    **executor_kw,
 ) -> StreamResult:
-    """One-call convenience: stream the whole image through ``mapper``."""
-    return StreamingExecutor(pipeline, mapper, splitter, **kw).run(**{})
+    """One-call convenience: stream the whole image through ``mapper``.
+
+    ``keep_outputs`` is the run-time option; everything else in
+    ``executor_kw`` goes to the :class:`StreamingExecutor` constructor."""
+    executor = StreamingExecutor(pipeline, mapper, splitter, **executor_kw)
+    return executor.run(keep_outputs=keep_outputs)

@@ -100,6 +100,15 @@ class Resample(Filter):
         c0, c1 = self._in_range(out_region.col0, out_region.col1, self.fc)
         return (ImageRegion((r0, c0), (r1 - r0, c1 - c0)),)
 
+    def plan_key(self, out_region: ImageRegion):
+        # generate()'s tap geometry depends on the output origin's *phase* on
+        # the resampling lattice, which repeats every ``numerator`` indices —
+        # regions sharing this phase (and shape) share one compiled trace
+        return (
+            out_region.row0 % self.fr.numerator,
+            out_region.col0 % self.fc.numerator,
+        )
+
     def generate(self, out_region: ImageRegion, x: jnp.ndarray) -> jnp.ndarray:
         x = x.astype(jnp.float32)
         req = self.requested_region(out_region, None)[0]

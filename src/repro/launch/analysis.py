@@ -119,6 +119,8 @@ def analyze_compiled(compiled, n_devices: int) -> Dict:
     """Extract per-device memory / cost / collective stats."""
     ma = compiled.memory_analysis()
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):  # older jax returns one dict per program
+        ca = ca[0] if ca else {}
     text = compiled.as_text()
     colls = parse_collective_bytes(text)
     return {

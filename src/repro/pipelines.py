@@ -130,6 +130,7 @@ def io_passthrough(src: Source, mapper_factory=None) -> Tuple[Pipeline, Mapper]:
 ALL = {
     "P1": p1_orthorectification,
     "P2": p2_textures,
+    "P3": p3_pansharpening,
     "P4": p4_classification,
     "P5": p5_meanshift,
     "P6": p6_conversion,

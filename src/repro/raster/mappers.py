@@ -14,6 +14,8 @@ class MemoryMapper(Mapper):
     """Assemble produced regions into one in-memory array (paper: "interfacing
     with some other system")."""
 
+    thread_safe = True  # concurrent consumes write disjoint slices
+
     def __init__(self, name: Optional[str] = None):
         super().__init__(name)
         self.result: Optional[np.ndarray] = None
@@ -33,17 +35,27 @@ class MemoryMapper(Mapper):
 class ParallelRasterWriter(Mapper):
     """The paper's parallel GeoTiff writer (§II.D): every worker writes its
     strips directly into their final in-file position (MPI-IO semantics via
-    memmap on disjoint byte ranges).  Static load balancing comes from the
-    splitting strategy + schedule, as in the paper."""
+    pwrite on disjoint byte ranges of one shared descriptor).  Static load
+    balancing comes from the splitting strategy + schedule, as in the paper;
+    the work-stealing pool and the write-behind stage rely on the same
+    disjoint-range safety."""
+
+    thread_safe = True  # pwrite on disjoint ranges, one descriptor
 
     def __init__(self, path: str, name: Optional[str] = None):
         super().__init__(name or f"write:{path}")
         self.path = path
         self._info: Optional[ImageInfo] = None
+        self._writer: Optional[rio.StripWriter] = None
 
     def begin(self, info: ImageInfo) -> None:
         self._info = info
-        rio.create(self.path, info)
+        self._writer = rio.StripWriter(self.path, info)
 
     def consume(self, out_region: ImageRegion, data: np.ndarray) -> None:
-        rio.write_strip(self.path, self._info, out_region, np.asarray(data))
+        self._writer.write(out_region, np.asarray(data))
+
+    def end(self) -> None:
+        if self._writer is not None:
+            self._writer.close()
+            self._writer = None

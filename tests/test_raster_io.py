@@ -1,6 +1,8 @@
 """RTIF container + strip-parallel writer (the paper's MPI-IO analogue)."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import ImageRegion, ImageInfo, StripeSplitter, whole

@@ -1,5 +1,8 @@
 """Property tests: region algebra invariants."""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import ImageRegion, whole

@@ -1,5 +1,8 @@
 """Load-balancing schedules: partition correctness + balance quality."""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, strategies as st
 
 from repro.core import (
@@ -8,6 +11,7 @@ from repro.core import (
     lpt_schedule,
     makespan,
     static_schedule,
+    work_stealing_schedule,
 )
 
 
@@ -48,6 +52,44 @@ def test_lpt_beats_static_on_skewed_costs():
         cost_weighted_static_schedule(regions, w, cost_fn), regions, cost_fn
     )
     assert ms_cw <= ms_static  # contiguous but cost-aware
+
+
+@given(st.integers(1, 40), st.integers(1, 8), st.integers(0, 10**6))
+def test_work_stealing_partitions_all(n, w, seed):
+    rng = np.random.default_rng(seed)
+    costs = rng.uniform(0.1, 10.0, size=n)
+    sched = work_stealing_schedule(_regions(n), w, lambda r: costs[r.row0 // 10])
+    flat = sorted(i for lst in sched for i in lst)
+    assert flat == list(range(n))
+
+
+@given(st.integers(1, 40), st.integers(1, 8), st.integers(0, 10**6))
+def test_work_stealing_graham_bound(n, w, seed):
+    """List scheduling obeys Graham's bound: makespan ≤ total/m + (1−1/m)·max,
+    i.e. at most (2 − 1/m)× any lower bound — the guarantee that makes dynamic
+    balancing safe for the paper's non-constant-cost pipelines (§IV.C)."""
+    rng = np.random.default_rng(seed)
+    costs = rng.uniform(0.1, 10.0, size=n)
+    cost_fn = lambda r: costs[r.row0 // 10]
+    regions = _regions(n)
+    ms = makespan(work_stealing_schedule(regions, w, cost_fn), regions, cost_fn)
+    assert ms <= costs.sum() / w + (1 - 1 / w) * costs.max() + 1e-9
+
+
+@given(st.integers(2, 8))
+def test_work_stealing_beats_static_on_skew(w):
+    """One pathological region at the head of the queue: the static blocked
+    split serializes it with its neighbors; stealing spreads the rest."""
+    n = 4 * w
+    regions = _regions(n)
+    costs = np.array([50.0] + [1.0] * (n - 1))
+    cost_fn = lambda r: costs[r.row0 // 10]
+    ms_static = makespan(static_schedule(regions, w), regions, cost_fn)
+    ms_ws = makespan(work_stealing_schedule(regions, w, cost_fn), regions, cost_fn)
+    ms_lpt = makespan(lpt_schedule(regions, w, cost_fn), regions, cost_fn)
+    assert ms_ws <= ms_static
+    # LPT sorts by cost first, so it lower-bounds queue-order stealing here
+    assert ms_lpt <= ms_ws + 1e-9
 
 
 @given(st.integers(2, 30), st.integers(2, 6))

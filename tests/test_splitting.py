@@ -1,6 +1,8 @@
 """Property tests: every splitter tiles the domain exactly (paper §II.B/D)."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (
