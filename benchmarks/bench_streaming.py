@@ -14,6 +14,13 @@ the baseline for the engine rows, compile count for the compile row (must be
 3 on striped P2: top/interior/bottom boundary signatures, of which only the
 interior one is hit repeatedly), and sequential/pool wall-time ratio for the
 work-stealing orchestrator row.
+
+The ``plan_describe_vs_lower`` rows microbench the ExecutionPlan layer's
+cache-hit cost: a registry hit runs the describe pass only, so its per-region
+host overhead must beat the old hit path (describe **plus** rebuilding the
+O(graph) closure tree).  ``run(quick=True)`` (CI smoke: ``--quick``) keeps
+the cached-engine measurement and this microbench, and skips the slow
+baseline/I/O/pool sweeps.
 """
 from __future__ import annotations
 
@@ -45,19 +52,69 @@ def _timed(executor: StreamingExecutor):
     return time.perf_counter() - t0, res
 
 
-def run() -> List:
+def _plan_layer_microbench(out: List, quick: bool) -> None:
+    """Cache-hit host cost: describe pass alone vs describe + closure build
+    (what every registry hit used to pay before the describe/lower split).
+
+    Uses a deep filter chain on a fine split — the regime the refactor
+    targets (per-region host overhead scales with graph size) — and takes the
+    best of several trials so scheduler noise doesn't drown the ratio."""
+    from repro.filters import gaussian_smoothing
+    from repro.raster import MemoryMapper
+
+    from repro.core import Pipeline
+
+    p = Pipeline()
+    n = p.add(SyntheticScene(256, 64, bands=2, dtype=np.float32))
+    for _ in range(12):
+        n = p.add(gaussian_smoothing(1.0), [n])
+    m = p.add(MemoryMapper(), [n])
+    info = p.info(m)
+    regions = StripeSplitter(n_splits=16).split(info.full_region, info)
+    for r in regions:  # warm both walks
+        p.describe_pull(m, r)
+        p.compile_pull(m, r)
+
+    reps, trials = (3, 3) if quick else (20, 5)
+
+    def best(fn):
+        times = []
+        for _ in range(trials):
+            t0 = time.perf_counter()
+            for _ in range(reps):
+                for r in regions:
+                    fn(m, r)
+            times.append((time.perf_counter() - t0) / (reps * len(regions)))
+        return min(times)
+
+    dt_describe = best(p.describe_pull)
+    dt_lower = best(p.compile_pull)
+
+    out.append(("plan_describe_pass_us", dt_describe * 1e6, dt_lower / dt_describe))
+    out.append(("plan_describe_plus_lower_us", dt_lower * 1e6, dt_lower / dt_describe))
+    if dt_describe >= dt_lower:
+        print("# WARNING: describe pass not cheaper than describe+lower "
+              f"({dt_describe*1e6:.1f}us vs {dt_lower*1e6:.1f}us)", file=sys.stderr)
+
+
+def run(quick: bool = False) -> List:
     out = []
     with tempfile.TemporaryDirectory(prefix="bench_streaming_") as d:
         tmp = Path(d)
         splitter = StripeSplitter(n_splits=STRIPES)
 
-        # seed semantics: retrace + recompile every region
-        p, m = _p2(tmp, "rejit")
-        dt_rejit, res = _timed(
-            StreamingExecutor(p, m, splitter, cache=False, prefetch=0)
-        )
-        regions = res.regions_processed
-        out.append(("streaming_P2_rejit_baseline", dt_rejit * 1e6, regions / dt_rejit))
+        _plan_layer_microbench(out, quick)
+
+        dt_rejit = None
+        if not quick:
+            # seed semantics: retrace + recompile every region
+            p, m = _p2(tmp, "rejit")
+            dt_rejit, res = _timed(
+                StreamingExecutor(p, m, splitter, cache=False, prefetch=0)
+            )
+            regions = res.regions_processed
+            out.append(("streaming_P2_rejit_baseline", dt_rejit * 1e6,
+                        regions / dt_rejit))
 
         # compiled-plan cache, synchronous loop
         p, m = _p2(tmp, "cached")
@@ -65,12 +122,15 @@ def run() -> List:
         dt_cached, _ = _timed(
             StreamingExecutor(p, m, splitter, plan_cache=cache, prefetch=0)
         )
-        out.append(("streaming_P2_engine_cached", dt_cached * 1e6, dt_rejit / dt_cached))
+        out.append(("streaming_P2_engine_cached", dt_cached * 1e6,
+                    (dt_rejit / dt_cached) if dt_rejit else 0.0))
         out.append(("streaming_P2_compiles", float(cache.stats.compiles),
                     float(cache.stats.hits)))
         if cache.stats.compiles != 3:  # top/interior/bottom boundary signatures
             print(f"# WARNING: expected 3 compiles on striped P2, got "
                   f"{cache.stats.compiles}", file=sys.stderr)
+        if quick:
+            return out
 
         # cached + async double buffering (measures read/write overlap)
         p, m = _p2(tmp, "async")

@@ -15,6 +15,10 @@ import sys
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="io,streaming,pipelines,balancing,kernels,roofline")
+    ap.add_argument(
+        "--quick", action="store_true",
+        help="fast smoke path (CI): benches that support it skip slow sweeps",
+    )
     args = ap.parse_args()
     wanted = set(args.only.split(","))
 
@@ -26,7 +30,7 @@ def main() -> None:
     if "streaming" in wanted:
         from benchmarks import bench_streaming
 
-        rows += bench_streaming.run()
+        rows += bench_streaming.run(quick=args.quick)
     if "pipelines" in wanted:
         from benchmarks import bench_pipelines
 

@@ -4,6 +4,12 @@ Exports the region algebra, process-object protocol, pipeline DAG, splitting
 strategies, streaming executor, and the shard_map cluster executor.
 """
 from repro.core.region import ImageRegion, whole
+from repro.core.execplan import (
+    CacheStats,
+    PlanCache,
+    PlanDescription,
+    global_plan_cache,
+)
 from repro.core.process_object import (
     GeoTransform,
     ImageInfo,
@@ -32,8 +38,6 @@ from repro.core.scheduling import (
     makespan,
 )
 from repro.core.streaming import (
-    CacheStats,
-    PlanCache,
     StreamingExecutor,
     StreamResult,
     execute,
@@ -74,6 +78,8 @@ __all__ = [
     "makespan",
     "CacheStats",
     "PlanCache",
+    "PlanDescription",
+    "global_plan_cache",
     "StreamingExecutor",
     "StreamResult",
     "execute",

@@ -1,0 +1,234 @@
+"""The ExecutionPlan layer: one compiled-plan registry for every executor.
+
+The paper's framework promises that *any* pipeline runs on *any* cluster
+layout transparently; the executors must therefore agree on what a compiled
+plan *is*.  This module owns that contract:
+
+  * :class:`PlanDescription` — the result of the cheap *describe* pass
+    (``Pipeline.describe_pull``): the set of source reads, the canonical plan
+    signature, the dynamic origin scalars and the persistent nodes for one
+    (node, region) request.  Building it costs one host-side graph walk and
+    **no** closure construction — it is run once per region, on every region.
+  * :class:`PlanCache` — the process-shareable compiled-plan registry, keyed
+    by canonical signature.  The *lower* pass (``Pipeline.lower_pull``, which
+    builds the jittable closure tree) runs only on registry misses; hits are
+    describe-pass-only.  Both :class:`~repro.core.streaming.StreamingExecutor`
+    and :class:`~repro.core.parallel.ParallelExecutor` consult one registry,
+    so a pipeline traced by one executor is a cache *hit* for the other on
+    matching strip geometry.
+  * :func:`global_plan_cache` — the process-wide default registry
+    (LRU-bounded), used by the orchestrator so stages mixing streaming and
+    SPMD workers share compiled plans.
+
+Plan signatures embed per-node *serial numbers* (monotonic construction
+counters, see :class:`~repro.core.process_object.ProcessObject`) rather than
+``id()`` values, so a process-wide registry can never confuse a dead
+pipeline's recycled object ids with a live one's.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import threading
+from typing import TYPE_CHECKING, Callable, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+if TYPE_CHECKING:  # pragma: no cover — typing only, avoids an import cycle
+    from repro.core.pipeline import PullPlan
+    from repro.core.process_object import PersistentFilter, ProcessObject, Source
+    from repro.core.region import ImageRegion
+
+
+@dataclasses.dataclass
+class CacheStats:
+    """Counters for one :class:`PlanCache`.
+
+    ``compiles`` counts actual jax traces of registry entries (incremented
+    from inside the traced body, so a value of 1 proves a whole run retraced
+    exactly once).  ``lowers`` counts closure-tree constructions (lower
+    passes) — on the describe-pass path a cache hit performs zero of either.
+    """
+
+    compiles: int = 0
+    hits: int = 0
+    misses: int = 0
+    evictions: int = 0
+    lowers: int = 0
+
+
+@dataclasses.dataclass
+class PlanDescription:
+    """Output of the describe pass: everything the registry and the read
+    stage need, with no compiled closure attached.
+
+    ``reads``: list of (source, clamped_region, requested_region) in plan
+    order; ``signature`` is the canonical plan key (shape/boundary/plan-key
+    static data, per-node serials); ``origin_values`` are this region's
+    absolute coordinates for ``needs_origin`` nodes, threaded into the
+    compiled function as traced scalars.
+    """
+
+    node: "ProcessObject"
+    out_region: "ImageRegion"
+    reads: List[Tuple["Source", "ImageRegion", "ImageRegion"]]
+    signature: Tuple
+    origin_values: Tuple[int, ...]
+    persistent_nodes: List["PersistentFilter"]
+
+    def read_sources(self) -> List:
+        return [s.generate(clamped) for s, clamped, _ in self.reads]
+
+    def origins(self) -> Tuple[np.int32, ...]:
+        """Per-region dynamic origin scalars, in canonical slot order.  Passed
+        as arrays so jit traces (not bakes) them."""
+        return tuple(np.int32(v) for v in self.origin_values)
+
+    def initial_pstates(self) -> Dict[str, Dict]:
+        return {p.name: p.reset() for p in self.persistent_nodes}
+
+
+class _CompiledEntry:
+    """One jitted canonical function.  The first call is serialized so
+    concurrent pool workers can't race XLA into tracing the same signature
+    twice; afterwards calls are lock-free.  ``canonical_fn`` stays reachable
+    so the SPMD executor can trace the very same closure into its shard_map
+    program instead of rebuilding it."""
+
+    def __init__(self, canonical_fn: Callable, stats: CacheStats):
+        self.canonical_fn = canonical_fn
+
+        def counted(arrays, pstates, origins):
+            stats.compiles += 1  # executes at trace time only
+            return canonical_fn(arrays, pstates, origins)
+
+        self._jitted = jax.jit(counted)
+        self._lock = threading.Lock()
+        self._primed = False
+
+    def __call__(self, arrays, pstates, origins):
+        if not self._primed:
+            with self._lock:
+                out = self._jitted(arrays, pstates, origins)
+                self._primed = True
+                return out
+        return self._jitted(arrays, pstates, origins)
+
+
+class PlanCache:
+    """Compiled-plan registry keyed by canonical plan signature.
+
+    Shareable across executors / pool workers / orchestrator stages (all
+    methods are thread-safe).  ``max_entries`` bounds the registry with LRU
+    eviction; evicted entries recompile on next use (counted in stats).
+
+    Besides per-region pull plans the registry also holds whole executor
+    programs (e.g. a jitted shard_map SPMD program) via :meth:`get_or_build`,
+    so repeated :class:`~repro.core.parallel.ParallelExecutor` runs on the
+    same pipeline/geometry reuse one program.
+    """
+
+    def __init__(self, max_entries: Optional[int] = None):
+        if max_entries is not None and max_entries < 1:
+            raise ValueError("max_entries must be >= 1")
+        self.max_entries = max_entries
+        self.stats = CacheStats()
+        self._entries: "collections.OrderedDict[Tuple, object]" = (
+            collections.OrderedDict()
+        )
+        self._lock = threading.Lock()
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def _store(self, key, value):
+        self._entries[key] = value
+        if self.max_entries is not None and len(self._entries) > self.max_entries:
+            self._entries.popitem(last=False)
+            self.stats.evictions += 1
+
+    def compiled(self, plan: "PullPlan") -> _CompiledEntry:
+        """The compiled function for an already-lowered ``plan`` (the legacy
+        entry point: the caller paid the closure build regardless of hit or
+        miss).  Plans with equal signatures share one entry."""
+        key = plan.signature
+        with self._lock:
+            entry = self._entries.get(key)
+            if entry is not None:
+                self.stats.hits += 1
+                self._entries.move_to_end(key)
+                return entry
+            self.stats.misses += 1
+            self.stats.lowers += 1  # the caller lowered eagerly for this miss
+            entry = _CompiledEntry(plan.canonical_fn, self.stats)
+            self._store(key, entry)
+            return entry
+
+    def compiled_for(
+        self, desc: PlanDescription, lower: Callable[[], "PullPlan"]
+    ) -> _CompiledEntry:
+        """The compiled function for ``desc``'s signature.  On a hit the
+        closure tree is **not** rebuilt — ``lower`` runs only on misses, and
+        *outside* the registry lock so a miss never stalls other workers'
+        hits (two workers racing the same cold signature may both lower; the
+        first insert wins and only it is counted — XLA tracing is still
+        deduplicated by the entry's own priming lock)."""
+        key = desc.signature
+        with self._lock:
+            entry = self._entries.get(key)
+            if entry is not None:
+                self.stats.hits += 1
+                self._entries.move_to_end(key)
+                return entry
+        plan = lower()
+        with self._lock:
+            entry = self._entries.get(key)
+            if entry is not None:  # lost the race: the peer's lower won
+                self.stats.hits += 1
+                self._entries.move_to_end(key)
+                return entry
+            self.stats.misses += 1
+            self.stats.lowers += 1
+            entry = _CompiledEntry(plan.canonical_fn, self.stats)
+            self._store(key, entry)
+            return entry
+
+    def get_or_build(self, key: Tuple, build: Callable[[], object]):
+        """Generic registry slot for executor-level programs (keyed by the
+        caller; e.g. a jitted SPMD program under its geometry signature).
+        ``build`` runs outside the lock; the first insert wins."""
+        with self._lock:
+            entry = self._entries.get(key)
+            if entry is not None:
+                self.stats.hits += 1
+                self._entries.move_to_end(key)
+                return entry
+        built = build()
+        with self._lock:
+            entry = self._entries.get(key)
+            if entry is not None:
+                self.stats.hits += 1
+                self._entries.move_to_end(key)
+                return entry
+            self.stats.misses += 1
+            self._store(key, built)
+            return built
+
+
+_GLOBAL_LOCK = threading.Lock()
+_GLOBAL_CACHE: Optional[PlanCache] = None
+
+
+def global_plan_cache() -> PlanCache:
+    """The process-wide compiled-plan registry (LRU-bounded).
+
+    Executors accept any :class:`PlanCache`; this is the canonical shared one
+    — the orchestrator and :func:`repro.pipelines.run_pipeline` default to
+    it, so streaming, pool and SPMD runs in one process share compiled plans.
+    """
+    global _GLOBAL_CACHE
+    with _GLOBAL_LOCK:
+        if _GLOBAL_CACHE is None:
+            _GLOBAL_CACHE = PlanCache(max_entries=512)
+        return _GLOBAL_CACHE

@@ -11,6 +11,12 @@ role GeoTiff plays in the paper's production setting).  Each stage declares
 its own worker count / executor kind, so a poorly-scaling stage (paper:
 heavy-I/O or non-parallelizable filters) can run at a different width than
 a compute-bound one.
+
+All stages consult one shared :class:`~repro.core.execplan.PlanCache` (the
+process-wide registry by default), so a DAG mixing thread-pool streaming
+stages (``executor="pool"``) and shard_map SPMD stages (``executor="spmd"``)
+shares compiled plans: a stage graph already traced by one executor kind is
+a registry hit for the other on matching strip geometry.
 """
 from __future__ import annotations
 
@@ -20,10 +26,11 @@ import tempfile
 import time
 from typing import Callable, Dict, List, Optional, Sequence
 
+from repro.core.execplan import CacheStats, PlanCache, global_plan_cache
 from repro.core.pipeline import Pipeline
 from repro.core.process_object import Mapper
 from repro.core.splitting import Splitter, StripeSplitter
-from repro.core.streaming import CacheStats, run_pool
+from repro.core.streaming import run_pool
 
 
 @dataclasses.dataclass
@@ -37,6 +44,14 @@ class Stage:
     ``scheduler`` picks how the stage's ``n_workers`` threads share regions:
     ``"work_stealing"`` (default — one shared queue, idle workers steal),
     ``"static"`` or ``"lpt"`` (precomputed slices, still run concurrently).
+
+    ``executor`` selects the execution engine: ``"pool"`` (default — the
+    concurrent streaming driver) or ``"spmd"`` (the shard_map
+    :class:`~repro.core.parallel.ParallelExecutor` over up to ``n_workers``
+    devices).  Both kinds draw compiled plans from the orchestrator's shared
+    registry.  ``splitter``, ``scheduler`` and ``use_jit`` only apply to the
+    pool engine — an SPMD stage derives its strip geometry from the device
+    count and always runs jitted (the orchestrator rejects contradictions).
     """
 
     name: str
@@ -46,6 +61,7 @@ class Stage:
     splitter: Optional[Splitter] = None
     scheduler: str = "work_stealing"
     use_jit: bool = True
+    executor: str = "pool"
 
 
 @dataclasses.dataclass
@@ -58,19 +74,59 @@ class StageResult:
 
 
 class Orchestrator:
-    def __init__(self, stages: Sequence[Stage], workdir: Optional[str] = None):
+    def __init__(
+        self,
+        stages: Sequence[Stage],
+        workdir: Optional[str] = None,
+        plan_cache: Optional[PlanCache] = None,
+    ):
         self.stages = list(stages)
         names = [s.name for s in self.stages]
         if len(set(names)) != len(names):
             raise ValueError("stage names must be unique")
         known = set()
         for s in self.stages:  # declaration order must be topological
+            if s.executor not in ("pool", "spmd"):
+                raise ValueError(f"stage {s.name}: unknown executor {s.executor}")
+            if s.executor == "spmd" and (s.splitter is not None or not s.use_jit):
+                raise ValueError(
+                    f"stage {s.name}: splitter/use_jit=False are pool-only "
+                    "options — the spmd engine derives strip geometry from "
+                    "the device count and always runs jitted"
+                )
             missing = [i for i in s.inputs if i not in known]
             if missing:
                 raise ValueError(f"stage {s.name}: unknown inputs {missing}")
             known.add(s.name)
         self.workdir = pathlib.Path(workdir or tempfile.mkdtemp(prefix="orch_"))
         self.workdir.mkdir(parents=True, exist_ok=True)
+        # one registry across every stage and executor kind (process-wide by
+        # default): streaming and SPMD stages share compiled plans
+        self.plan_cache = plan_cache if plan_cache is not None else global_plan_cache()
+
+    def _run_stage(self, stage: Stage, pipeline: Pipeline, mapper: Mapper):
+        if stage.executor == "spmd":
+            import jax
+
+            from repro.core.parallel import ParallelExecutor
+
+            devices = jax.devices()[: max(1, stage.n_workers)]
+            return ParallelExecutor(
+                pipeline, mapper, devices=devices, plan_cache=self.plan_cache
+            ).run()
+        splitter = stage.splitter or StripeSplitter(
+            n_splits=max(4, stage.n_workers * 4)
+        )
+        # the stage's workers run concurrently against one shared region
+        # queue (work stealing) or their schedule slices, with the
+        # orchestrator-wide PlanCache — a uniform split compiles once
+        return run_pool(
+            pipeline, mapper, splitter,
+            n_workers=stage.n_workers,
+            scheduler=stage.scheduler,
+            use_jit=stage.use_jit,
+            plan_cache=self.plan_cache,
+        )
 
     def run(self, verbose: bool = False) -> Dict[str, StageResult]:
         paths: Dict[str, str] = {}
@@ -80,19 +136,8 @@ class Orchestrator:
             pipeline, mapper = stage.build(
                 {i: paths[i] for i in stage.inputs}, out_path
             )
-            splitter = stage.splitter or StripeSplitter(
-                n_splits=max(4, stage.n_workers * 4)
-            )
             t0 = time.time()
-            # the stage's workers run concurrently against one shared region
-            # queue (work stealing) or their schedule slices — run_pool gives
-            # them one shared PlanCache, so a uniform split compiles once
-            res = run_pool(
-                pipeline, mapper, splitter,
-                n_workers=stage.n_workers,
-                scheduler=stage.scheduler,
-                use_jit=stage.use_jit,
-            )
+            res = self._run_stage(stage, pipeline, mapper)
             dt = time.time() - t0
             paths[stage.name] = out_path
             results[stage.name] = StageResult(

@@ -31,6 +31,23 @@ Two kinds of reads feed filters:
 
 Anything else (data-dependent regions, non-affine request growth) raises
 ``NotStripParallelizable`` and should run through the streaming driver.
+
+**Unified ExecutionPlan path** — ``build_strip_plan`` no longer hand-rolls
+the per-strip pull when it doesn't have to.  For covariant graphs it runs the
+cheap describe pass (``Pipeline.describe_pull``) for every worker strip,
+checks that all interior strips share one canonical plan signature, and
+fetches the strip body from the shared
+:class:`~repro.core.execplan.PlanCache` — the very same registry (and the
+very same lowered closure) the streaming engine uses.  A pipeline streamed
+first and then run SPMD on matching strip geometry is therefore a registry
+*hit*: no new describe→lower pass, no new closure tree, and the per-strip
+``needs_origin`` coordinates become traced affine functions of the mesh
+index.  Halo geometry is folded in by slicing each plan read out of the
+halo-exchanged local shard at static offsets.  Graphs that need per-device
+masks (uneven rows over persistent filters) or coordinate reads fall back to
+the legacy hand-rolled closure.  The jitted SPMD program itself is registered
+in the same cache under its geometry key, so repeated executors on one
+pipeline reuse one program.
 """
 from __future__ import annotations
 
@@ -49,6 +66,7 @@ try:  # jax>=0.8 exposes shard_map at top level
 except AttributeError:  # pragma: no cover
     from jax.experimental.shard_map import shard_map  # type: ignore
 
+from repro.core.execplan import PlanCache
 from repro.core.pipeline import Pipeline
 from repro.core.process_object import (
     ImageInfo,
@@ -121,6 +139,15 @@ class StripPlan:
     source_strips: List[SourceStrip]
     #: fn(local_arrays, axis_idx) -> (out_strip, {pname: state})
     fn: Callable
+    #: True when the strip body is the shared canonical plan from the
+    #: ExecutionPlan registry (one trace with the equivalent streaming
+    #: stripes); False on the legacy hand-rolled closure fallback
+    unified: bool = False
+    #: canonical signature of the shared per-strip plan (unified path only)
+    plan_signature: Optional[Tuple] = None
+    #: registry key prefix for the jitted SPMD program (device ids appended
+    #: by the executor)
+    program_key: Tuple = ()
 
 
 def _probe_edges(pipeline: Pipeline, mapper: Mapper, k: int, H: int, cols: int):
@@ -152,8 +179,121 @@ def _is_coordinate_read(pipeline, parent, node) -> bool:
     )
 
 
+def _row_pads_free(signature: Tuple) -> bool:
+    """True when no record of a canonical signature bakes in row clamping —
+    the plan is *interior* (border behavior comes from halo edge
+    replication, not from the trace)."""
+    for rec in signature:
+        if rec[0] == "read":
+            pads = rec[4]
+        elif rec[0] == "node":
+            pads = rec[3]
+        else:
+            continue
+        if pads[0] or pads[1]:
+            return False
+    return True
+
+
+def _try_unified_strip_fn(
+    pipeline: Pipeline,
+    mapper: Mapper,
+    n_workers: int,
+    H: int,
+    cols: int,
+    out_info: ImageInfo,
+    strip_by_source: Dict[int, SourceStrip],
+    plan_cache: PlanCache,
+):
+    """Build the per-strip body from the shared ExecutionPlan registry.
+
+    Runs the describe pass for every worker strip (host-side, cheap), picks
+    the interior canonical signature, and — when all interior strips share it
+    — fetches/lower the canonical closure through ``plan_cache`` so the SPMD
+    program traces the *same* plan the streaming engine compiles for the
+    equivalent stripes.  Per-worker ``needs_origin`` coordinates are affine
+    in the mesh index (slopes fitted and verified from the describes); plan
+    reads are static slices of the halo-exchanged local shards.
+
+    Returns ``(strip_fn, description)`` or ``None`` when the geometry cannot
+    share one interior trace (row clamping everywhere, per-strip plan keys,
+    non-affine origins, reads outside the haloed window).
+    """
+    persistent = pipeline.persistent_nodes()
+    if persistent and H * n_workers != out_info.rows:
+        return None  # padded strips would need mask-aware accumulation
+    descs = [
+        pipeline.describe_pull(mapper, ImageRegion((k * H, 0), (H, cols)))
+        for k in range(n_workers)
+    ]
+    kp = n_workers // 2
+    d0 = descs[kp]
+    if not _row_pads_free(d0.signature):
+        return None
+    eligible = [
+        k for k in range(n_workers) if descs[k].signature == d0.signature
+    ]
+    interior = range(1, n_workers - 1) if n_workers >= 3 else range(n_workers)
+    if not set(interior).issubset(eligible):
+        return None  # interior strips don't share one trace
+    nslots = len(d0.origin_values)
+    ka = eligible[0]
+    va = descs[ka].origin_values
+    if nslots and len(eligible) > 1:
+        kb = eligible[1]
+        vb = descs[kb].origin_values
+        dk = kb - ka
+        if any((vb[i] - va[i]) % dk for i in range(nslots)):
+            return None
+        slot_pitches = tuple((vb[i] - va[i]) // dk for i in range(nslots))
+        for k in eligible:  # origins must be affine in the worker index
+            vk = descs[k].origin_values
+            if any(
+                vk[i] != va[i] + (k - ka) * slot_pitches[i]
+                for i in range(nslots)
+            ):
+                return None
+    elif nslots and n_workers > 1:
+        return None  # can't fit the per-worker origin slope from one sample
+    else:
+        slot_pitches = (0,) * nslots
+
+    # every plan read must be a static window of the halo-exchanged shard
+    read_specs = []
+    for src, clamped, _req in d0.reads:
+        ss = strip_by_source.get(id(src))
+        if ss is None:
+            return None
+        off = clamped.row0 - (kp * ss.pitch - ss.halo_top)
+        if off < 0 or off + clamped.rows > ss.pitch + ss.halo_top + ss.halo_bot:
+            return None
+        read_specs.append((id(src), off, clamped.rows, clamped.col0, clamped.col1))
+
+    entry = plan_cache.compiled_for(d0, lambda: pipeline.lower_pull(d0))
+    canonical = entry.canonical_fn
+    bases = tuple(va[i] - ka * slot_pitches[i] for i in range(nslots))
+
+    def strip_fn(local_arrays: Dict[int, jnp.ndarray], axis_idx):
+        arrays = [
+            local_arrays[sid][off : off + rows, c0:c1]
+            for sid, off, rows, c0, c1 in read_specs
+        ]
+        origins = tuple(
+            jnp.int32(bases[i]) + axis_idx * slot_pitches[i]
+            for i in range(nslots)
+        )
+        pstates = {p.name: p.reset() for p in persistent}
+        return canonical(arrays, pstates, origins)
+
+    return strip_fn, d0
+
+
 def build_strip_plan(
-    pipeline: Pipeline, mapper: Mapper, n_workers: int, axis_name: str = "workers"
+    pipeline: Pipeline,
+    mapper: Mapper,
+    n_workers: int,
+    axis_name: str = "workers",
+    plan_cache: Optional[PlanCache] = None,
 ) -> StripPlan:
     infos = pipeline.update_information()
     out_info = infos[id(mapper)]
@@ -169,6 +309,7 @@ def build_strip_plan(
     pitches: Dict[Tuple[int, ImageRegion], int] = {}
     #: per source: list of (pitch_or_None, [row ranges over all k])
     src_reads: Dict[int, List[Tuple[Optional[int], List[Tuple[int, int]]]]] = {}
+    has_coord_reads = False
 
     for i, (parent0, node0, r0) in enumerate(probes[0]):
         occs = [p[i][2] for p in probes]
@@ -179,6 +320,7 @@ def build_strip_plan(
         row_ranges = [(r.row0, r.row1) for r in occs]
         if coord_read:
             # geometry is free-form; the filter samples by absolute coords
+            has_coord_reads = True
             src_reads.setdefault(id(node0), []).append((None, row_ranges))
             continue
         # covariant edge: constant size, constant integer pitch, no col drift
@@ -227,7 +369,34 @@ def build_strip_plan(
         source_strips.append(ss)
         strip_by_source[id(src)] = ss
 
-    # --- build the local strip closure (worker-0 geometry, shared by all) ----
+    geom = tuple(
+        (ss.source._serial, ss.pitch, ss.halo_top, ss.halo_bot)
+        for ss in source_strips
+    )
+    cache = plan_cache if plan_cache is not None else PlanCache()
+
+    # --- preferred: the shared canonical plan from the ExecutionPlan layer ---
+    if not has_coord_reads:
+        unified = _try_unified_strip_fn(
+            pipeline, mapper, n_workers, H, cols, out_info, strip_by_source,
+            cache,
+        )
+        if unified is not None:
+            strip_fn, desc = unified
+            return StripPlan(
+                n_workers=n_workers,
+                strip_rows=H,
+                out_info=out_info,
+                source_strips=source_strips,
+                fn=strip_fn,
+                unified=True,
+                plan_signature=desc.signature,
+                program_key=(
+                    "spmd", axis_name, n_workers, H, geom, desc.signature,
+                ),
+            )
+
+    # --- fallback: hand-rolled local strip closure (worker-0 geometry) -------
     persistent = pipeline.persistent_nodes()
 
     def build(node: ProcessObject, region: ImageRegion, ctx, coord_read: bool = False):
@@ -320,6 +489,10 @@ def build_strip_plan(
         out_info=out_info,
         source_strips=source_strips,
         fn=strip_fn,
+        unified=False,
+        program_key=(
+            "spmd-legacy", axis_name, n_workers, H, mapper._serial, geom,
+        ),
     )
 
 
@@ -347,13 +520,19 @@ class ParallelExecutor:
         mapper: Mapper,
         devices: Optional[Sequence] = None,
         axis_name: str = "workers",
+        plan_cache: Optional[PlanCache] = None,
     ):
         self.pipeline = pipeline
         self.mapper = mapper
         self.devices = list(devices if devices is not None else jax.devices())
         self.axis_name = axis_name
         self.n = len(self.devices)
-        self.plan = build_strip_plan(pipeline, mapper, self.n, axis_name)
+        # the shared ExecutionPlan registry: pass the one the streaming
+        # executor used and matching strip geometry becomes a registry hit
+        self.plan_cache = plan_cache if plan_cache is not None else PlanCache()
+        self.plan = build_strip_plan(
+            pipeline, mapper, self.n, axis_name, plan_cache=self.plan_cache
+        )
         self.mesh = Mesh(np.array(self.devices), (axis_name,))
 
     # -- global input staging --------------------------------------------------
@@ -399,9 +578,19 @@ class ParallelExecutor:
 
         in_specs = tuple(P(axis, None, None) for _ in ids)
         out_specs = (P(axis, None, None), P())  # states fully reduced → replicated
-        fn = shard_map(worker, mesh=self.mesh, in_specs=in_specs, out_specs=out_specs)
+
+        def make_program():
+            fn = shard_map(
+                worker, mesh=self.mesh, in_specs=in_specs, out_specs=out_specs
+            )
+            return jax.jit(fn)
+
+        # the jitted SPMD program lives in the shared registry too: a second
+        # executor on the same pipeline/geometry/devices reuses one program
+        key = self.plan.program_key + (tuple(d.id for d in self.devices),)
+        jitted = self.plan_cache.get_or_build(key, make_program)
         globals_ = [self._padded_global(ss) for ss in plan.source_strips]
-        return jax.jit(fn), globals_
+        return jitted, globals_
 
     def run(self, keep_outputs: bool = False):
         from repro.core.streaming import StreamResult  # cycle-free local import
@@ -432,6 +621,7 @@ class ParallelExecutor:
             pixels_processed=info.rows * info.cols,
             persistent_results=presults,
             outputs=outputs if keep_outputs else None,
+            cache_stats=self.plan_cache.stats,
         )
 
     def lower(self):

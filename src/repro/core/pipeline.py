@@ -4,10 +4,16 @@
 
   * ``update_information()``   — phase 1, metadata downstream;
   * ``pull(node, region)``     — phases 2+3 for one requested region (eager);
-  * ``compile_pull(node, region)`` — symbolic version: extracts the set of
-    source reads plus a pure jax function mapping source arrays → output
-    pixels.  This is what the shard_map parallel driver partitions, and what
-    ``jax.jit`` compiles for the streaming driver's hot loop.
+  * ``describe_pull(node, region)`` — the cheap *describe* pass: source
+    reads, canonical plan signature and origin scalars, with no closure
+    construction.  Run once per region; on a plan-registry hit it is the
+    only per-region graph work.
+  * ``compile_pull(node, region)`` — describe **plus** the *lower* pass: the
+    pure jax closure mapping source arrays → output pixels.  This is what
+    the shard_map parallel driver partitions, and what ``jax.jit`` compiles
+    for the streaming driver's hot loop.  ``lower_pull(desc)`` lowers an
+    existing description (the :class:`~repro.core.execplan.PlanCache` calls
+    it on registry misses only).
 
 Plans are *canonical*: every region-dependent quantity that XLA must treat as
 static (array shapes, boundary-pad widths, graph structure) is folded into
@@ -33,6 +39,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.execplan import PlanDescription
 from repro.core.process_object import (
     ImageInfo,
     Mapper,
@@ -147,9 +154,31 @@ class Pipeline:
         cache[key] = data
         return data
 
-    # -- symbolic pull: extract (source reads, pure function) ------------------
+    # -- symbolic pull: describe (cheap) + lower (closure construction) --------
+    def describe_pull(
+        self, node: ProcessObject, out_region: ImageRegion
+    ) -> PlanDescription:
+        """The describe pass: reads + canonical signature + origin scalars
+        for ``node`` over ``out_region``, with **no** closure construction.
+
+        Runs the same recursion as :meth:`compile_pull` (so the signature is
+        bit-identical) but skips building the O(graph) closure tree — on a
+        plan-registry hit this is the only per-region graph work."""
+        return self._plan_walk(node, out_region, lower=False)
+
+    def lower_pull(self, desc: PlanDescription) -> "PullPlan":
+        """The lower pass: build the jittable closure for a described plan.
+        The plan registry calls this on misses only."""
+        plan = self._plan_walk(desc.node, desc.out_region, lower=True)
+        assert plan.signature == desc.signature, (
+            "describe/lower signature drift",
+            desc.node.name,
+        )
+        return plan
+
     def compile_pull(self, node: ProcessObject, out_region: ImageRegion) -> "PullPlan":
-        """Build a canonical :class:`PullPlan` for ``node`` over ``out_region``.
+        """Build a canonical :class:`PullPlan` for ``node`` over ``out_region``
+        (describe + lower in one walk).
 
         ``canonical_fn(arrays, pstates, origins)`` maps source arrays (covering
         the plan's clamped source regions, in plan order), a persistent-state
@@ -157,6 +186,9 @@ class Pipeline:
         ``(pixels, new_pstates)``.  Absolute coordinates of ``needs_origin``
         nodes are *not* baked in — they are read from ``origins`` so one
         compiled function serves every region with the same ``signature``."""
+        return self._plan_walk(node, out_region, lower=True)
+
+    def _plan_walk(self, node: ProcessObject, out_region: ImageRegion, lower: bool):
         infos = self.update_information()
         reads: List[Tuple[Source, ImageRegion, ImageRegion]] = []
         read_index: Dict[Tuple[int, ImageRegion], int] = {}
@@ -183,7 +215,7 @@ class Pipeline:
 
             return run
 
-        def build(n: ProcessObject, region: ImageRegion) -> Callable:
+        def build(n: ProcessObject, region: ImageRegion) -> Optional[Callable]:
             key = (id(n), region)
             if key in built:
                 ordinal, fn = built[key]
@@ -207,15 +239,17 @@ class Pipeline:
                     reads.append((n, clamped, region))  # type: ignore[arg-type]
                 idx = read_index[k]
                 sig.append(
-                    ("read", id(n), idx, clamped.size, pads,
+                    ("read", n._serial, idx, clamped.size, pads,
                      np.dtype(own_info.dtype).str, own_info.bands)
                 )
+                fn = None
+                if lower:
 
-                def run_source(arrays, origins, ctx, _idx=idx,
-                               _clamped=clamped, _region=region):
-                    return boundary_pad(arrays[_idx], _clamped, _region)
+                    def run_source(arrays, origins, ctx, _idx=idx,
+                                   _clamped=clamped, _region=region):
+                        return boundary_pad(arrays[_idx], _clamped, _region)
 
-                fn = memoize(key, run_source)
+                    fn = memoize(key, run_source)
                 built[key] = (ordinal, fn)
                 return fn
 
@@ -233,44 +267,55 @@ class Pipeline:
                 else None
             )
             sig.append(
-                ("node", id(n), clamped.size, pads, origin_aware, persist,
+                ("node", n._serial, clamped.size, pads, origin_aware, persist,
                  n.plan_key(clamped))
             )
+            fn = None
+            if lower:
 
-            def run_node(arrays, origins, ctx, _n=n, _clamped=clamped,
-                         _region=region, _fns=child_fns, _oi=oi, _ii=ii,
-                         _persist=persist):
-                ins = [f(arrays, origins, ctx) for f in _fns]
-                if _persist:
-                    ctx["pstates"][_n.name] = _n.accumulate(
-                        ctx["pstates"][_n.name], _clamped, *ins
-                    )
-                if _oi is not None:
-                    out = _n.generate(
-                        _clamped,
-                        *ins,
-                        origin=(origins[_oi[0]], origins[_oi[1]]),
-                        input_origins=tuple(
-                            (origins[a], origins[b]) for a, b in _ii
-                        ),
-                    )
-                else:
-                    out = _n.generate(_clamped, *ins)
-                return boundary_pad(out, _clamped, _region)
+                def run_node(arrays, origins, ctx, _n=n, _clamped=clamped,
+                             _region=region, _fns=child_fns, _oi=oi, _ii=ii,
+                             _persist=persist):
+                    ins = [f(arrays, origins, ctx) for f in _fns]
+                    if _persist:
+                        ctx["pstates"][_n.name] = _n.accumulate(
+                            ctx["pstates"][_n.name], _clamped, *ins
+                        )
+                    if _oi is not None:
+                        out = _n.generate(
+                            _clamped,
+                            *ins,
+                            origin=(origins[_oi[0]], origins[_oi[1]]),
+                            input_origins=tuple(
+                                (origins[a], origins[b]) for a, b in _ii
+                            ),
+                        )
+                    else:
+                        out = _n.generate(_clamped, *ins)
+                    return boundary_pad(out, _clamped, _region)
 
-            fn = memoize(key, run_node)
+                fn = memoize(key, run_node)
             built[key] = (ordinal, fn)
             return fn
 
         root = build(node, out_region)
         persistent_nodes = list(persistent)
+        static_origins = tuple(origin_values)
+
+        if not lower:
+            return PlanDescription(
+                node=node,
+                out_region=out_region,
+                reads=reads,
+                signature=tuple(sig),
+                origin_values=static_origins,
+                persistent_nodes=persistent_nodes,
+            )
 
         def canonical_fn(arrays, pstates, origins):
             ctx = {"pstates": dict(pstates), "memo": {}}
             out = root(arrays, origins, ctx)
             return out, ctx["pstates"]
-
-        static_origins = tuple(origin_values)
 
         def legacy_fn(arrays, _origins=static_origins):
             # seed-compatible entry point: origins baked in as constants

@@ -26,6 +26,7 @@ The paper's key dichotomy (§II.C.1):
 from __future__ import annotations
 
 import dataclasses
+import itertools
 from typing import Any, Dict, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
@@ -76,6 +77,11 @@ class ImageInfo:
         return self.rows * self.cols * self.bytes_per_pixel
 
 
+#: monotonic construction counter — plan signatures embed ``_serial`` (never
+#: recycled, unlike ``id()``) so a process-wide plan registry stays sound
+_SERIALS = itertools.count()
+
+
 class ProcessObject:
     """Base class. Subclasses override the three protocol methods."""
 
@@ -88,6 +94,7 @@ class ProcessObject:
 
     def __init__(self, name: Optional[str] = None):
         self.name = name or type(self).__name__
+        self._serial = next(_SERIALS)
 
     # -- phase 1: metadata downstream ---------------------------------------
     def output_info(self, *input_infos: ImageInfo) -> ImageInfo:

@@ -106,9 +106,12 @@ class WorkStealingQueue:
     static schedule (so when costs are uniform, workers keep the
     strip-adjacent access pattern the parallel writer likes).  An owner pops
     from the *front* of its own deque; a worker whose deque is empty steals
-    from the *tail* of the victim with the most remaining cost — tail
-    stealing preserves the victim's locality, front popping preserves the
-    thief's.  ``steals`` counts successful steals."""
+    *half* of the victim with the most remaining cost — the tail block, in
+    original order, so both halves keep their strip adjacency.  Stealing half
+    (rather than one) makes the number of steal operations — and therefore
+    lock acquisitions — logarithmic instead of linear in the imbalance, which
+    is what keeps lock traffic negligible on very fine splits.  ``steals``
+    counts steal operations; ``items_stolen`` counts transferred items."""
 
     def __init__(
         self,
@@ -128,6 +131,7 @@ class WorkStealingQueue:
         self._remaining = [sum(self._costs[i] for i in idxs) for idxs in seed]
         self._lock = threading.Lock()
         self.steals = 0
+        self.items_stolen = 0
 
     def take(self, worker: int) -> Optional[int]:
         """Next item index for ``worker``; None when the whole queue is dry."""
@@ -144,10 +148,18 @@ class WorkStealingQueue:
                     victim, best = w, self._remaining[w]
             if victim < 0:
                 return None
-            i = self._deques[victim].pop()
-            self._remaining[victim] -= self._costs[i]
+            vd = self._deques[victim]
+            half = (len(vd) + 1) // 2  # steal half, at least one
+            block = [vd.pop() for _ in range(half)][::-1]  # tail, in order
+            moved = sum(self._costs[i] for i in block)
+            self._remaining[victim] -= moved
             self.steals += 1
-            return i
+            self.items_stolen += half
+            first, rest = block[0], block[1:]
+            if rest:
+                dq.extend(rest)
+                self._remaining[worker] += moved - self._costs[first]
+            return first
 
 
 def makespan(

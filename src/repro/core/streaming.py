@@ -7,16 +7,20 @@ host-level parallel run (e.g. one process per pod host feeding its devices).
 
 Three layers make the hot loop run at hardware speed:
 
-  1. **Canonical plans** — ``Pipeline.compile_pull`` folds every
-     shape/boundary-static quantity into ``PullPlan.signature`` and threads
-     absolute coordinates (``needs_origin``) and persistent-filter state
-     through the pure function as traced arguments.
-  2. **PlanCache** — an explicit compiled-function registry keyed by plan
-     signature ``(node, region shape, boundary pads)``.  A uniform stripe
-     split compiles exactly once per distinct signature (interior stripes
-     share one entry; border stripes with different clamp/pad geometry get
-     their own).  Hit/miss/compile/eviction counts are surfaced in
-     ``StreamResult.cache_stats``.
+  1. **Canonical plans** — the describe pass (``Pipeline.describe_pull``)
+     folds every shape/boundary-static quantity into a plan signature; the
+     lower pass builds the closure threading absolute coordinates
+     (``needs_origin``) and persistent-filter state through the pure function
+     as traced arguments.
+  2. **PlanCache** — the shared compiled-plan registry of the ExecutionPlan
+     layer (:mod:`repro.core.execplan`), keyed by plan signature.  A uniform
+     stripe split compiles exactly once per distinct signature (interior
+     stripes share one entry; border stripes with different clamp/pad
+     geometry get their own), and registry *hits* run the cheap describe
+     pass only — the lower pass (closure construction) happens on misses.
+     Hit/miss/compile/lower/eviction counts are surfaced in
+     ``StreamResult.cache_stats``; the same registry serves the SPMD
+     :class:`~repro.core.parallel.ParallelExecutor`.
   3. **Async double buffering** — with ``prefetch=k``, source reads for the
      next ``k`` regions run on a thread pool while the device computes the
      current one, and ``mapper.consume`` is handed to a background writer
@@ -44,13 +48,18 @@ import dataclasses
 import queue
 import threading
 from concurrent.futures import ThreadPoolExecutor
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.pipeline import Pipeline, PullPlan
+from repro.core.execplan import (  # noqa: F401 — re-exported for back-compat
+    CacheStats,
+    PlanCache,
+    _CompiledEntry,
+)
+from repro.core.pipeline import Pipeline
 from repro.core.process_object import Mapper, PersistentFilter
 from repro.core.region import ImageRegion
 from repro.core.scheduling import (
@@ -62,80 +71,6 @@ from repro.core.scheduling import (
 from repro.core.splitting import Splitter, StripeSplitter
 
 _SCHEDULERS = ("static", "lpt", "work_stealing")
-
-
-@dataclasses.dataclass
-class CacheStats:
-    """Counters for one :class:`PlanCache`.  ``compiles`` counts actual jax
-    traces (incremented from inside the traced body), so a value of 1 proves
-    a whole run retraced exactly once."""
-
-    compiles: int = 0
-    hits: int = 0
-    misses: int = 0
-    evictions: int = 0
-
-
-class _CompiledEntry:
-    """One jitted canonical function.  The first call is serialized so
-    concurrent pool workers can't race XLA into tracing the same signature
-    twice; afterwards calls are lock-free."""
-
-    def __init__(self, canonical_fn: Callable, stats: CacheStats):
-        def counted(arrays, pstates, origins):
-            stats.compiles += 1  # executes at trace time only
-            return canonical_fn(arrays, pstates, origins)
-
-        self._jitted = jax.jit(counted)
-        self._lock = threading.Lock()
-        self._primed = False
-
-    def __call__(self, arrays, pstates, origins):
-        if not self._primed:
-            with self._lock:
-                out = self._jitted(arrays, pstates, origins)
-                self._primed = True
-                return out
-        return self._jitted(arrays, pstates, origins)
-
-
-class PlanCache:
-    """Compiled-plan registry keyed by canonical plan signature.
-
-    Shareable across executors / pool workers / orchestrator stages (all
-    methods are thread-safe).  ``max_entries`` bounds the registry with LRU
-    eviction; evicted entries recompile on next use (counted in stats)."""
-
-    def __init__(self, max_entries: Optional[int] = None):
-        if max_entries is not None and max_entries < 1:
-            raise ValueError("max_entries must be >= 1")
-        self.max_entries = max_entries
-        self.stats = CacheStats()
-        self._entries: "collections.OrderedDict[Tuple, _CompiledEntry]" = (
-            collections.OrderedDict()
-        )
-        self._lock = threading.Lock()
-
-    def __len__(self) -> int:
-        return len(self._entries)
-
-    def compiled(self, plan: PullPlan) -> Callable:
-        """The compiled function for ``plan``'s signature (compiling lazily on
-        first call).  Plans with equal signatures share one entry."""
-        key = plan.signature
-        with self._lock:
-            entry = self._entries.get(key)
-            if entry is not None:
-                self.stats.hits += 1
-                self._entries.move_to_end(key)
-                return entry
-            self.stats.misses += 1
-            entry = _CompiledEntry(plan.canonical_fn, self.stats)
-            self._entries[key] = entry
-            if self.max_entries is not None and len(self._entries) > self.max_entries:
-                self._entries.popitem(last=False)
-                self.stats.evictions += 1
-            return entry
 
 
 class _WriteBehind:
@@ -236,10 +171,14 @@ class StreamingExecutor:
 
     # -- the prefetch stage: host-side planning + source reads ----------------
     def _prepare(self, region: ImageRegion):
-        plan = self.pipeline.compile_pull(self.mapper, region)
-        fn = self.plan_cache.compiled(plan)
-        arrays = plan.read_sources()
-        return plan, fn, arrays
+        # describe pass only; the O(graph) closure tree is lowered by the
+        # registry on misses — cache hits never rebuild it
+        desc = self.pipeline.describe_pull(self.mapper, region)
+        fn = self.plan_cache.compiled_for(
+            desc, lambda: self.pipeline.lower_pull(desc)
+        )
+        arrays = desc.read_sources()
+        return desc, fn, arrays
 
     def run(self, keep_outputs: bool = False) -> StreamResult:
         pipeline, mapper = self.pipeline, self.mapper
@@ -430,9 +369,9 @@ def run_pool(
         for i in indices(w):
             region = regions[i]
             if use_jit:
-                plan = pipeline.compile_pull(mapper, region)
-                fn = cache.compiled(plan)
-                out, pstates = fn(plan.read_sources(), pstates, plan.origins())
+                desc = pipeline.describe_pull(mapper, region)
+                fn = cache.compiled_for(desc, lambda: pipeline.lower_pull(desc))
+                out, pstates = fn(desc.read_sources(), pstates, desc.origins())
                 data = np.asarray(out)
             else:
                 data = np.asarray(

@@ -3,6 +3,12 @@
 Each builder returns ``(pipeline, mapper)`` terminated by the given mapper
 factory (defaults to an in-memory mapper; pass a ParallelRasterWriter factory
 for file output, which reproduces the paper's parallel-write setup).
+
+:func:`run_pipeline` executes any of them through the unified ExecutionPlan
+layer: whichever executor is picked (streaming, thread pool, shard_map SPMD),
+compiled plans come from one shared registry, so P1–P7 run on any engine —
+and switching engines on matching geometry is a registry hit, not a
+recompile.
 """
 from __future__ import annotations
 
@@ -137,3 +143,68 @@ ALL = {
     "P7": p7_resampling,
     "IO": io_passthrough,
 }
+
+
+def run_pipeline(
+    name,
+    *sources,
+    executor: str = "streaming",
+    plan_cache=None,
+    splitter=None,
+    n_workers: Optional[int] = None,
+    keep_outputs: bool = False,
+    mapper_factory=None,
+    **builder_kw,
+):
+    """Execute a benchmark pipeline through the shared ExecutionPlan registry.
+
+    ``name`` is a key of :data:`ALL`, a builder callable, or an
+    already-built ``(pipeline, mapper)`` pair.  ``executor`` is
+    ``"streaming"`` (single-threaded double-buffered engine), ``"pool"``
+    (``n_workers`` work-stealing threads, default 1) or ``"spmd"``
+    (shard_map over the devices, capped at ``n_workers`` when given,
+    otherwise all).
+
+    Plan signatures are keyed by node identity, so registry reuse happens
+    for runs of the *same built pipeline*: pass the ``(pipeline, mapper)``
+    pair to run one graph on several executors — matching strip geometry is
+    then a registry hit (zero re-lowers/re-compiles) instead of a retrace.
+    A ``name``/builder argument constructs a fresh graph whose regions share
+    plans within that run only.  ``plan_cache`` defaults to the process-wide
+    registry (:func:`repro.core.global_plan_cache`, LRU-bounded); pass your
+    own :class:`~repro.core.PlanCache` to isolate counters.
+
+    Returns ``(StreamResult, mapper)``; the result's ``cache_stats`` exposes
+    the registry counters whichever executor ran.
+    """
+    from repro.core import StreamingExecutor, global_plan_cache, run_pool
+    from repro.core.parallel import ParallelExecutor
+
+    if isinstance(name, tuple):
+        pipeline, mapper = name
+    else:
+        build = ALL[name] if isinstance(name, str) else name
+        pipeline, mapper = build(
+            *sources, mapper_factory=mapper_factory, **builder_kw
+        )
+    cache = plan_cache if plan_cache is not None else global_plan_cache()
+    if executor == "streaming":
+        res = StreamingExecutor(
+            pipeline, mapper, splitter, plan_cache=cache
+        ).run(keep_outputs=keep_outputs)
+    elif executor == "pool":
+        res = run_pool(
+            pipeline, mapper, splitter,
+            n_workers=n_workers or 1, plan_cache=cache,
+            keep_outputs=keep_outputs,
+        )
+    elif executor == "spmd":
+        import jax
+
+        devices = jax.devices()[:n_workers] if n_workers else None
+        res = ParallelExecutor(
+            pipeline, mapper, devices=devices, plan_cache=cache
+        ).run(keep_outputs=keep_outputs)
+    else:
+        raise ValueError(f"unknown executor {executor!r}")
+    return res, mapper

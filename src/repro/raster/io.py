@@ -15,6 +15,7 @@ from __future__ import annotations
 
 import json
 import os
+import threading
 from concurrent.futures import ThreadPoolExecutor
 from typing import List, Optional, Tuple
 
@@ -106,24 +107,40 @@ class StripWriter:
     write-behind stage.
 
     ``write_strip`` reopens + remaps the file per strip; this keeps one file
-    descriptor and issues a single ``os.pwrite`` per full-width strip (which
-    is contiguous in the row-interleaved layout).  ``pwrite`` ignores the
+    descriptor and issues ``os.pwrite`` on full-width strips (which are
+    contiguous in the row-interleaved layout).  ``pwrite`` ignores the
     descriptor's shared offset, so any number of threads can push disjoint
     regions through one descriptor concurrently — the in-process analogue of
     MPI-IO file views.  Non-full-width regions (tile splits) write one
     ``pwrite`` per row segment, which ``write_strip``'s full-width-only
-    contract never supported."""
+    contract never supported.
 
-    def __init__(self, path: str, info: ImageInfo):
+    **Coalescing**: consecutive full-width strips that are row-contiguous
+    (exactly what the write-behind stage produces on a stripe split) are
+    batched into one ``pwrite`` — RTIF strips are contiguous on disk, so a
+    run of fine stripes becomes a single large syscall.  The run is flushed
+    when a non-adjacent region arrives, when buffered bytes reach
+    ``coalesce_bytes`` (bounding writer memory), on :meth:`flush`, and on
+    :meth:`close`; data is only guaranteed on disk after one of those.
+    ``coalesce_bytes=0`` disables batching (one syscall per strip, the seed
+    behavior)."""
+
+    def __init__(self, path: str, info: ImageInfo, coalesce_bytes: int = 8 << 20):
         create(path, info)
         self.path = path
         self.info = info
+        self.coalesce_bytes = int(coalesce_bytes)
         # os.pwrite is POSIX; fall back to a windowed memmap elsewhere so the
         # default raster writer keeps the old write_strip portability
         self._use_pwrite = hasattr(os, "pwrite")
         self._fd: Optional[int] = (
             os.open(path, os.O_RDWR) if self._use_pwrite else -1
         )
+        self._lock = threading.Lock()  # guards the pending run
+        self._run: List[np.ndarray] = []  # contiguous full-width strips
+        self._run_row0 = 0
+        self._run_rows = 0
+        self._run_bytes = 0
 
     def _pwrite_all(self, view: memoryview, offset: int) -> None:
         while view:  # pwrite may write short (Linux caps one call near 2 GiB)
@@ -142,10 +159,25 @@ class StripWriter:
         mm.flush()
         del mm
 
+    def _flush_locked(self) -> None:
+        if not self._run:
+            return
+        buf = self._run[0] if len(self._run) == 1 else np.concatenate(self._run)
+        offset = HEADER_BYTES + self._run_row0 * self.info.cols * self.info.bytes_per_pixel
+        self._run = []
+        self._run_rows = self._run_bytes = 0
+        self._pwrite_all(memoryview(buf).cast("B"), offset)
+
+    def flush(self) -> None:
+        """Force any coalesced pending strips onto disk."""
+        with self._lock:
+            self._flush_locked()
+
     def write(self, region: ImageRegion, data: np.ndarray) -> None:
         info = self.info
         if self._fd is None:
             raise ValueError(f"{self.path}: writer already closed")
+        caller_buf = data
         data = np.ascontiguousarray(data, dtype=info.dtype).reshape(
             region.rows, region.cols, info.bands
         )
@@ -153,10 +185,41 @@ class StripWriter:
             self._memmap_write(region, data)
             return
         bpp = info.bytes_per_pixel
-        view = memoryview(data).cast("B")
         if region.col0 == 0 and region.cols == info.cols:
-            self._pwrite_all(view, HEADER_BYTES + region.row0 * info.cols * bpp)
+            with self._lock:
+                contiguous = (
+                    self._run
+                    and region.row0 == self._run_row0 + self._run_rows
+                    and self._run_bytes + data.nbytes <= self.coalesce_bytes
+                )
+                if not contiguous:
+                    self._flush_locked()
+                    if data.nbytes >= self.coalesce_bytes:
+                        # nothing would stay pending: write through directly
+                        # (zero-copy — this is also the coalesce_bytes=0 path)
+                        self._pwrite_all(
+                            memoryview(data).cast("B"),
+                            HEADER_BYTES + region.row0 * info.cols * bpp,
+                        )
+                        return
+                    self._run_row0 = region.row0
+                # the run defers the pwrite past this call, so never hold a
+                # view of the caller's buffer (ascontiguousarray is a no-copy
+                # passthrough when dtype/layout already match) — a caller
+                # reusing its buffer must not mutate a pending strip
+                if isinstance(caller_buf, np.ndarray) and np.shares_memory(
+                    data, caller_buf
+                ):
+                    data = data.copy()
+                self._run.append(data)
+                self._run_rows += region.rows
+                self._run_bytes += data.nbytes
+                if self._run_bytes >= self.coalesce_bytes:
+                    self._flush_locked()
             return
+        view = memoryview(data).cast("B")
+        with self._lock:
+            self._flush_locked()  # keep strip/tile write order coherent
         row_bytes = region.cols * bpp
         for i in range(region.rows):
             offset = (
@@ -167,6 +230,7 @@ class StripWriter:
 
     def close(self) -> None:
         if self._fd is not None and self._fd >= 0:
+            self.flush()
             os.close(self._fd)
         self._fd = None
 

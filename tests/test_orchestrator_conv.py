@@ -80,3 +80,46 @@ def test_orchestrator_rejects_bad_dag(tmp_path):
     with pytest.raises(ValueError):
         Orchestrator([Stage("b", lambda i, o: None, inputs=("a",))],
                      workdir=str(tmp_path))
+
+def test_orchestrator_mixed_streaming_and_spmd_stages(tmp_path):
+    """A DAG mixing a thread-pool stage and a shard_map SPMD stage (one
+    device here) runs against one shared plan registry and still equals the
+    fused oracle; both stage results surface the registry counters."""
+    from repro.core import PlanCache
+
+    def stage1(_inputs, out):
+        p = Pipeline()
+        s = p.add(SyntheticScene(40, 32, bands=1, dtype=np.float32, seed=5))
+        g = p.add(gaussian_smoothing(1.0), [s])
+        m = p.add(ParallelRasterWriter(out), [g])
+        return p, m
+
+    def stage2(inputs, out):
+        p = Pipeline()
+        r = p.add(RasterReader(inputs["smooth"]))
+        e = p.add(SobelGradient(), [r])
+        m = p.add(ParallelRasterWriter(out), [e])
+        return p, m
+
+    cache = PlanCache()
+    orch = Orchestrator(
+        [
+            Stage("smooth", stage1, n_workers=2, executor="pool"),
+            Stage("edges", stage2, inputs=("smooth",), n_workers=1,
+                  executor="spmd"),
+        ],
+        workdir=str(tmp_path),
+        plan_cache=cache,
+    )
+    results = orch.run()
+    assert results["smooth"].cache_stats is cache.stats
+    assert results["edges"].cache_stats is cache.stats
+    staged = rio.read_region(results["edges"].path)
+
+    p = Pipeline()
+    s = p.add(SyntheticScene(40, 32, bands=1, dtype=np.float32, seed=5))
+    g = p.add(gaussian_smoothing(1.0), [s])
+    e = p.add(SobelGradient(), [g])
+    m = p.add(MemoryMapper(), [e])
+    fused = np.asarray(p.pull(m, p.info(m).full_region))
+    np.testing.assert_allclose(staged, fused, rtol=1e-4, atol=1e-3)

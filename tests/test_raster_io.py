@@ -1,9 +1,15 @@
 """RTIF container + strip-parallel writer (the paper's MPI-IO analogue)."""
+import os
+
 import numpy as np
 import pytest
 
-pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st
+try:  # only the property test needs hypothesis; the rest must always run
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover
+    HAVE_HYPOTHESIS = False
 
 from repro.core import ImageRegion, ImageInfo, StripeSplitter, whole
 from repro.core.process_object import GeoTransform
@@ -25,9 +31,21 @@ def test_roundtrip(tmp_path):
     assert info2.geo.spacing_x == 6.0
 
 
-@settings(max_examples=10, deadline=None)
-@given(st.integers(1, 12), st.integers(10, 80))
-def test_parallel_strip_writes_equal_serial(tmp_path_factory, n_writers, rows):
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(1, 12), st.integers(10, 80))
+    def test_parallel_strip_writes_equal_serial(tmp_path_factory, n_writers, rows):
+        _check_parallel_strip_writes(tmp_path_factory, n_writers, rows)
+
+else:  # stay visible as a skip (not silently uncollected) without hypothesis
+
+    @pytest.mark.skip(reason="property test needs hypothesis")
+    def test_parallel_strip_writes_equal_serial():
+        pass
+
+
+def _check_parallel_strip_writes(tmp_path_factory, n_writers, rows):
     tmp = tmp_path_factory.mktemp("pw")
     info = ImageInfo(rows, 17, 2, np.float32)
     data = np.random.default_rng(0).normal(size=(rows, 17, 2)).astype(np.float32)
@@ -77,3 +95,86 @@ def test_strip_must_span_full_width(tmp_path):
         rio.write_strip(
             path, info, ImageRegion((0, 2), (5, 5)), np.zeros((5, 5, 1), np.uint8)
         )
+
+
+class RecordingStripWriter(rio.StripWriter):
+    """Counts physical pwrite syscalls (one `calls` entry per kernel write)."""
+
+    def __init__(self, *a, **kw):
+        super().__init__(*a, **kw)
+        self.calls = []
+
+    def _pwrite_all(self, view, offset):
+        self.calls.append((offset, len(view)))
+        super()._pwrite_all(view, offset)
+
+
+def _strips(info, data, n):
+    return [
+        (r, data[r.slices()])
+        for r in StripeSplitter(n_splits=n).split(whole(info.rows, info.cols), info)
+    ]
+
+
+needs_pwrite = pytest.mark.skipif(
+    not hasattr(os, "pwrite"), reason="coalescing rides the POSIX pwrite path"
+)
+
+
+@needs_pwrite
+def test_strip_writer_coalesces_contiguous_runs(tmp_path):
+    """Adjacent full-width strips written in order collapse into ONE pwrite
+    (RTIF strips are contiguous on disk), verified by a recording fake."""
+    path = str(tmp_path / "c.rtif")
+    info = ImageInfo(32, 10, 2, np.float32)
+    data = np.random.default_rng(1).normal(size=(32, 10, 2)).astype(np.float32)
+    with RecordingStripWriter(path, info) as w:
+        for region, block in _strips(info, data, 8):
+            w.write(region, block)
+    assert len(w.calls) == 1  # 8 strips → 1 syscall
+    assert w.calls[0] == (rio.HEADER_BYTES, data.nbytes)
+    np.testing.assert_array_equal(rio.read_region(path), data)
+
+
+@needs_pwrite
+def test_strip_writer_flushes_on_gap_and_cap(tmp_path):
+    path = str(tmp_path / "g.rtif")
+    info = ImageInfo(32, 10, 1, np.float32)
+    data = np.random.default_rng(2).normal(size=(32, 10, 1)).astype(np.float32)
+    strips = _strips(info, data, 8)
+
+    # non-adjacent order: every write breaks the run → one syscall per strip
+    with RecordingStripWriter(path, info) as w:
+        for region, block in reversed(strips):
+            w.write(region, block)
+    assert len(w.calls) == len(strips)
+    np.testing.assert_array_equal(rio.read_region(path), data)
+
+    # byte cap bounds buffered memory: 2 strips per flush → 4 syscalls
+    cap = 2 * strips[0][1].nbytes
+    with RecordingStripWriter(path, info, coalesce_bytes=cap) as w:
+        for region, block in strips:
+            w.write(region, block)
+    assert len(w.calls) == 4
+    np.testing.assert_array_equal(rio.read_region(path), data)
+
+    # coalesce_bytes=0 keeps the seed's strict one-syscall-per-strip path
+    with RecordingStripWriter(path, info, coalesce_bytes=0) as w:
+        for region, block in strips:
+            w.write(region, block)
+    assert len(w.calls) == len(strips)
+
+
+@needs_pwrite
+def test_strip_writer_flush_makes_data_visible(tmp_path):
+    path = str(tmp_path / "f.rtif")
+    info = ImageInfo(8, 4, 1, np.float32)
+    data = np.arange(32, dtype=np.float32).reshape(8, 4, 1)
+    with RecordingStripWriter(path, info) as w:
+        w.write(ImageRegion((0, 0), (4, 4)), data[:4])
+        w.flush()  # explicit flush lands the pending run
+        np.testing.assert_array_equal(
+            rio.read_region(path, ImageRegion((0, 0), (4, 4))), data[:4]
+        )
+        w.write(ImageRegion((4, 0), (4, 4)), data[4:])
+    np.testing.assert_array_equal(rio.read_region(path), data)

@@ -271,14 +271,38 @@ def test_work_stealing_queue_drains_exactly_once_concurrently():
     assert flat == list(range(200))
 
 
-def test_work_stealing_queue_steals_from_most_loaded():
+def test_work_stealing_queue_steals_half_from_most_loaded():
     q = WorkStealingQueue(8, 2, costs=[10, 10, 10, 10, 1, 1, 1, 1])
     # worker 1 drains its own cheap half, then must steal worker 0's tail
     for _ in range(4):
         assert q.take(1) in (4, 5, 6, 7)
+    # steal-half: one steal operation transfers the tail block [2, 3] in
+    # original order — 2 comes back, 3 lands in the thief's deque
     stolen = q.take(1)
-    assert stolen == 3  # tail of worker 0's deque
+    assert stolen == 2
     assert q.steals == 1
+    assert q.items_stolen == 2
+    assert q.take(1) == 3  # from the thief's own deque, no second steal
+    assert q.steals == 1
+
+
+def test_work_stealing_steal_half_bounds_lock_traffic():
+    """A lone thief draining a loaded victim: steal-half needs O(log n) steal
+    operations (each a lock acquisition on the shared queue) where steal-one
+    needed n — the contention bound that matters on very fine splits."""
+    n = 64
+    q = WorkStealingQueue(n, 2)  # worker 0 owns [0, 32), worker 1 owns [32, 64)
+    taken = []
+    while True:
+        i = q.take(1)  # worker 1 does all the work; worker 0 never shows up
+        if i is None:
+            break
+        taken.append(i)
+    assert sorted(taken) == list(range(n))  # drained exactly once
+    # 32 own items cost zero steals; the other 32 arrive in halving blocks:
+    # 16, 8, 4, 2, 1, 1 → 6 steal operations, not 32
+    assert q.steals <= 7
+    assert q.items_stolen == 32
 
 
 def test_run_pool_matches_oracle_and_compiles_once():
