@@ -24,6 +24,30 @@ Plan signatures embed per-node *serial numbers* (monotonic construction
 counters, see :class:`~repro.core.process_object.ProcessObject`) rather than
 ``id()`` values, so a process-wide registry can never confuse a dead
 pipeline's recycled object ids with a live one's.
+
+Plan lifecycle — every executor follows the same four steps::
+
+      (node, region)
+            │ describe          Pipeline.describe_pull — one host graph walk:
+            ▼                   exact requests of needs_origin nodes become
+      PlanDescription           static-shape WINDOW specs (window_bound hook);
+            │ signature         reads/origins recorded, no closures built
+            ▼
+      canonical signature       shape/pad/plan-key statics + node serials +
+            │ registry lookup   window-spec shapes; absolute coordinates and
+            ▼                   window origins stay OUT (traced scalars)
+      PlanCache.compiled_for ── hit ──► _CompiledEntry (reuse, zero lowers)
+            │ miss
+            ▼ lower             Pipeline.lower_pull — closure tree
+      PullPlan.canonical_fn     fn(arrays, pstates, origins) → jit + register
+
+Windowed reads make this lifecycle *total* over P1–P7: a warp's drifting
+request is classified at describe time as a conservative static bounding
+window (rows anchored at the request origin, columns shifted in-image), so
+interior regions of one size share one signature, the streaming engine
+prefetches fixed-shape windows, and the SPMD executor lowers the same entry
+to ``lax.dynamic_slice`` of the halo-exchanged shard — one trace per
+geometry signature on every engine.
 """
 from __future__ import annotations
 
@@ -34,6 +58,8 @@ from typing import TYPE_CHECKING, Callable, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
+
+from repro.core.process_object import boundary_pad
 
 if TYPE_CHECKING:  # pragma: no cover — typing only, avoids an import cycle
     from repro.core.pipeline import PullPlan
@@ -58,6 +84,29 @@ class CacheStats:
     lowers: int = 0
 
 
+def read_plan_sources(reads, windows) -> List:
+    """Materialize a plan's source reads (shared by :class:`PlanDescription`
+    and :class:`~repro.core.pipeline.PullPlan`).  Windowed reads are
+    delivered at the full static window shape — the trace carries no pads
+    for them, so border spill is edge-replicated here, at the read stage.
+
+    An empty ``windows`` means "no windowed reads" (plans built before the
+    describe pass existed); a non-empty tuple must align with ``reads``.
+    """
+    if windows and len(windows) != len(reads):
+        raise ValueError(
+            f"windows/reads misaligned: {len(windows)} window specs for "
+            f"{len(reads)} reads"
+        )
+    wins = windows if windows else (None,) * len(reads)
+    return [
+        boundary_pad(s.generate(clamped), clamped, region)
+        if w is not None
+        else s.generate(clamped)
+        for (s, clamped, region), w in zip(reads, wins)
+    ]
+
+
 @dataclasses.dataclass
 class PlanDescription:
     """Output of the describe pass: everything the registry and the read
@@ -67,7 +116,10 @@ class PlanDescription:
     order; ``signature`` is the canonical plan key (shape/boundary/plan-key
     static data, per-node serials); ``origin_values`` are this region's
     absolute coordinates for ``needs_origin`` nodes, threaded into the
-    compiled function as traced scalars.
+    compiled function as traced scalars.  ``windows[i]`` is the static
+    (rows, cols) window-spec shape when read *i* is a windowed read (the
+    request of a ``needs_origin`` node lowered to a fixed-shape bounding
+    window whose origin is traced), else None.
     """
 
     node: "ProcessObject"
@@ -76,9 +128,10 @@ class PlanDescription:
     signature: Tuple
     origin_values: Tuple[int, ...]
     persistent_nodes: List["PersistentFilter"]
+    windows: Tuple[Optional[Tuple[int, int]], ...] = ()
 
     def read_sources(self) -> List:
-        return [s.generate(clamped) for s, clamped, _ in self.reads]
+        return read_plan_sources(self.reads, self.windows)
 
     def origins(self) -> Tuple[np.int32, ...]:
         """Per-region dynamic origin scalars, in canonical slot order.  Passed

@@ -88,11 +88,15 @@ class Orchestrator:
         for s in self.stages:  # declaration order must be topological
             if s.executor not in ("pool", "spmd"):
                 raise ValueError(f"stage {s.name}: unknown executor {s.executor}")
-            if s.executor == "spmd" and (s.splitter is not None or not s.use_jit):
+            if s.executor == "spmd" and (
+                s.splitter is not None
+                or not s.use_jit
+                or s.scheduler != "work_stealing"
+            ):
                 raise ValueError(
-                    f"stage {s.name}: splitter/use_jit=False are pool-only "
-                    "options — the spmd engine derives strip geometry from "
-                    "the device count and always runs jitted"
+                    f"stage {s.name}: splitter/scheduler/use_jit=False are "
+                    "pool-only options — the spmd engine derives strip "
+                    "geometry from the device count and always runs jitted"
                 )
             missing = [i for i in s.inputs if i not in known]
             if missing:

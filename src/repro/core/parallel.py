@@ -24,29 +24,35 @@ Two kinds of reads feed filters:
     worker with constant size (box filters, integer-ratio resampling).  The
     planner slices the exact requested window from the haloed local shard;
     this is checked against the probes of all workers.
-  * *coordinate reads* — requests of ``needs_origin`` filters (warps) whose
-    windows drift fractionally per worker.  The filter instead receives the
-    whole haloed local shard (full width) plus exact traced array origins
-    (``input_origins``) and samples purely by absolute coordinates.
+  * *windowed reads* — requests of ``needs_origin`` filters (warps) whose
+    exact windows drift fractionally per worker.  The describe pass lowers
+    them to the plan layer's *window specs* (``ProcessObject.window_bound``):
+    conservative static-shape bounding windows whose absolute origins are
+    traced scalars.  Constant shape means one canonical plan for every
+    interior strip; the per-worker window origin becomes a constant table
+    gathered at the mesh index, and the window itself is a
+    ``lax.dynamic_slice`` of the halo-exchanged local shard.
 
-Anything else (data-dependent regions, non-affine request growth) raises
+Anything else (data-dependent regions, non-affine request growth, drifting
+``needs_origin`` reads without a ``window_bound``) raises
 ``NotStripParallelizable`` and should run through the streaming driver.
 
-**Unified ExecutionPlan path** — ``build_strip_plan`` no longer hand-rolls
-the per-strip pull when it doesn't have to.  For covariant graphs it runs the
-cheap describe pass (``Pipeline.describe_pull``) for every worker strip,
-checks that all interior strips share one canonical plan signature, and
-fetches the strip body from the shared
-:class:`~repro.core.execplan.PlanCache` — the very same registry (and the
-very same lowered closure) the streaming engine uses.  A pipeline streamed
-first and then run SPMD on matching strip geometry is therefore a registry
-*hit*: no new describe→lower pass, no new closure tree, and the per-strip
-``needs_origin`` coordinates become traced affine functions of the mesh
-index.  Halo geometry is folded in by slicing each plan read out of the
-halo-exchanged local shard at static offsets.  Graphs that need per-device
-masks (uneven rows over persistent filters) or coordinate reads fall back to
-the legacy hand-rolled closure.  The jitted SPMD program itself is registered
-in the same cache under its geometry key, so repeated executors on one
+**Unified ExecutionPlan path** — ``build_strip_plan`` runs the cheap
+describe pass (``Pipeline.describe_pull``) for every worker strip, checks
+that all interior strips share one canonical plan signature, and fetches the
+strip body from the shared :class:`~repro.core.execplan.PlanCache` — the
+very same registry (and the very same lowered closure) the streaming engine
+uses.  A pipeline streamed first and then run SPMD on matching strip
+geometry is therefore a registry *hit*: no new describe→lower pass, no new
+closure tree.  Per-strip ``needs_origin`` coordinates (including window
+origins) are threaded as per-worker constant tables indexed by the mesh
+index; plan reads are static slices of the halo-exchanged local shard when
+their offsets are strip-invariant and ``lax.dynamic_slice`` windows
+otherwise.  Graphs that need per-device masks (uneven rows over persistent
+filters) fall back to the legacy hand-rolled closure — the only remaining
+non-registry path, since windowed reads retired the whole-shard
+coordinate-read closure.  The jitted SPMD program itself is registered in
+the same cache under its geometry key, so repeated executors on one
 pipeline reuse one program.
 """
 from __future__ import annotations
@@ -75,6 +81,7 @@ from repro.core.process_object import (
     ProcessObject,
     Reduction,
     Source,
+    windowed_requests,
 )
 from repro.core.region import ImageRegion
 
@@ -151,32 +158,27 @@ class StripPlan:
 
 
 def _probe_edges(pipeline: Pipeline, mapper: Mapper, k: int, H: int, cols: int):
-    """Unclamped requested-region propagation for worker ``k``'s strip.
-    Returns a DFS-ordered list of (parent_or_None, node, region) — every
+    """Unclamped requested-region propagation for worker ``k``'s strip, with
+    the same window classification as the describe pass (``needs_origin``
+    requests become static-shape bounding windows).  Returns a DFS-ordered
+    list of (parent_or_None, node, region, in_window) — every
     producer→consumer edge occurrence plus the root."""
     infos = pipeline.update_information()
     edges = []
 
-    def walk(parent, node: ProcessObject, region: ImageRegion):
-        edges.append((parent, node, region))
+    def walk(parent, node: ProcessObject, region: ImageRegion, in_window: bool):
+        edges.append((parent, node, region, in_window))
         ups = pipeline.inputs_of(node)
         if not ups:
             return
         in_infos = [infos[id(u)] for u in ups]
         reqs = node.requested_region(region, *in_infos)
-        for u, r in zip(ups, reqs):
-            walk(node, u, r)
+        reqs, wbounds = windowed_requests(node, region.size, reqs, in_infos)
+        for u, r, wb in zip(ups, reqs, wbounds):
+            walk(node, u, r, in_window or wb is not None)
 
-    walk(None, mapper, ImageRegion((k * H, 0), (H, cols)))
+    walk(None, mapper, ImageRegion((k * H, 0), (H, cols)), False)
     return edges
-
-
-def _is_coordinate_read(pipeline, parent, node) -> bool:
-    return (
-        parent is not None
-        and getattr(parent, "needs_origin", False)
-        and not pipeline.inputs_of(node)
-    )
 
 
 def _row_pads_free(signature: Tuple) -> bool:
@@ -211,17 +213,20 @@ def _try_unified_strip_fn(
     the interior canonical signature, and — when all interior strips share it
     — fetches/lower the canonical closure through ``plan_cache`` so the SPMD
     program traces the *same* plan the streaming engine compiles for the
-    equivalent stripes.  Per-worker ``needs_origin`` coordinates are affine
-    in the mesh index (slopes fitted and verified from the describes); plan
-    reads are static slices of the halo-exchanged local shards.
+    equivalent stripes.  Per-worker ``needs_origin`` coordinates (covariant
+    origins and windowed-read origins alike) become constant per-worker
+    tables gathered at the mesh index; plan reads whose offsets are
+    strip-invariant stay static slices of the halo-exchanged local shard,
+    drifting window reads lower to ``lax.dynamic_slice`` at table offsets.
 
     Returns ``(strip_fn, description)`` or ``None`` when the geometry cannot
     share one interior trace (row clamping everywhere, per-strip plan keys,
-    non-affine origins, reads outside the haloed window).
+    mismatched walk shapes, reads outside the haloed window).
     """
     persistent = pipeline.persistent_nodes()
     if persistent and H * n_workers != out_info.rows:
         return None  # padded strips would need mask-aware accumulation
+    infos = pipeline.update_information()
     descs = [
         pipeline.describe_pull(mapper, ImageRegion((k * H, 0), (H, cols)))
         for k in range(n_workers)
@@ -237,50 +242,104 @@ def _try_unified_strip_fn(
     if not set(interior).issubset(eligible):
         return None  # interior strips don't share one trace
     nslots = len(d0.origin_values)
-    ka = eligible[0]
-    va = descs[ka].origin_values
-    if nslots and len(eligible) > 1:
-        kb = eligible[1]
-        vb = descs[kb].origin_values
-        dk = kb - ka
-        if any((vb[i] - va[i]) % dk for i in range(nslots)):
-            return None
-        slot_pitches = tuple((vb[i] - va[i]) // dk for i in range(nslots))
-        for k in eligible:  # origins must be affine in the worker index
-            vk = descs[k].origin_values
-            if any(
-                vk[i] != va[i] + (k - ka) * slot_pitches[i]
-                for i in range(nslots)
-            ):
-                return None
-    elif nslots and n_workers > 1:
-        return None  # can't fit the per-worker origin slope from one sample
-    else:
-        slot_pitches = (0,) * nslots
+    if any(len(descs[k].origin_values) != nslots for k in range(n_workers)):
+        return None  # walk shape differs → slot tables would misalign
+    if any(len(descs[k].reads) != len(d0.reads) for k in range(n_workers)):
+        return None
 
-    # every plan read must be a static window of the halo-exchanged shard
+    # per-slot origin tables over the mesh index: a constant gather handles
+    # every per-strip drift the describe pass produced (affine or not)
+    tables = [
+        tuple(int(descs[k].origin_values[i]) for k in range(n_workers))
+        for i in range(nslots)
+    ]
+
+    # every plan read is a window of the halo-exchanged shard: a static slice
+    # when its offset is strip-invariant, a dynamic_slice at per-strip table
+    # offsets otherwise (drifting windowed reads); windowed reads deliver the
+    # full static window shape (row spill comes from halo edge-replication,
+    # column spill from a uniform edge pad — the trace carries no pads)
     read_specs = []
-    for src, clamped, _req in d0.reads:
+    for i, (src, clamped, req) in enumerate(d0.reads):
         ss = strip_by_source.get(id(src))
         if ss is None:
             return None
-        off = clamped.row0 - (kp * ss.pitch - ss.halo_top)
-        if off < 0 or off + clamped.rows > ss.pitch + ss.halo_top + ss.halo_bot:
+        if any(descs[k].reads[i][0] is not src for k in range(n_workers)):
             return None
-        read_specs.append((id(src), off, clamped.rows, clamped.col0, clamped.col1))
+        if any(descs[k].reads[i][2].size != req.size for k in range(n_workers)):
+            return None
+        local_rows = ss.pitch + ss.halo_top + ss.halo_bot
+        src_cols = infos[id(src)].cols
+        windowed = i < len(d0.windows) and d0.windows[i] is not None
+        if windowed:
+            rows, wcols = req.size
+            offs = [
+                descs[k].reads[i][2].row0 - (k * ss.pitch - ss.halo_top)
+                for k in range(n_workers)
+            ]
+            cls = [descs[k].reads[i][2].col0 for k in range(n_workers)]
+            if wcols <= src_cols:
+                ncols, cpad = wcols, (0, 0)
+                if any(c < 0 or c + wcols > src_cols for c in cls):
+                    return None
+            else:
+                # window wider than the image: uniform right-edge pad
+                # (window_request anchors every strip's window at col 0)
+                ncols, cpad = src_cols, (0, wcols - src_cols)
+                if any(c != 0 for c in cls):
+                    return None
+        else:
+            if clamped.rows != req.rows:  # row clamps — _row_pads_free guards
+                return None
+            rows, ncols = clamped.rows, clamped.cols
+            cpad = (0, 0)
+            pl = clamped.col0 - req.col0  # col clamp baked in the trace
+            offs = [
+                descs[k].reads[i][2].row0 - (k * ss.pitch - ss.halo_top)
+                for k in range(n_workers)
+            ]
+            cls = [descs[k].reads[i][2].col0 + pl for k in range(n_workers)]
+        if any(o < 0 or o + rows > local_rows for o in offs):
+            return None
+        # static only when EVERY worker (border strips run this trace too,
+        # via halo replication) agrees on the shard offset
+        if all(offs[k] == offs[kp] and cls[k] == cls[kp]
+               for k in range(n_workers)):
+            read_specs.append((id(src), False, offs[kp], cls[kp], rows, ncols, cpad))
+        else:
+            if any(c < 0 or c + ncols > src_cols for c in cls):
+                return None
+            read_specs.append(
+                (id(src), True, tuple(offs), tuple(cls), rows, ncols, cpad)
+            )
 
     entry = plan_cache.compiled_for(d0, lambda: pipeline.lower_pull(d0))
     canonical = entry.canonical_fn
-    bases = tuple(va[i] - ka * slot_pitches[i] for i in range(nslots))
 
     def strip_fn(local_arrays: Dict[int, jnp.ndarray], axis_idx):
-        arrays = [
-            local_arrays[sid][off : off + rows, c0:c1]
-            for sid, off, rows, c0, c1 in read_specs
-        ]
+        arrays = []
+        for sid, dyn_read, roff, coff, rows, ncols, cpad in read_specs:
+            local = local_arrays[sid]
+            if dyn_read:
+                r = jnp.asarray(roff, jnp.int32)[axis_idx]
+                c = jnp.asarray(coff, jnp.int32)[axis_idx]
+                arr = lax.dynamic_slice(
+                    local,
+                    (r, c) + (0,) * (local.ndim - 2),
+                    (rows, ncols) + tuple(local.shape[2:]),
+                )
+            else:
+                arr = local[roff:roff + rows, coff:coff + ncols]
+            if cpad != (0, 0):
+                arr = jnp.pad(
+                    arr, [(0, 0), cpad] + [(0, 0)] * (arr.ndim - 2),
+                    mode="edge",
+                )
+            arrays.append(arr)
         origins = tuple(
-            jnp.int32(bases[i]) + axis_idx * slot_pitches[i]
-            for i in range(nslots)
+            jnp.int32(t[0]) if len(set(t)) == 1
+            else jnp.asarray(t, jnp.int32)[axis_idx]
+            for t in tables
         )
         pstates = {p.name: p.reset() for p in persistent}
         return canonical(arrays, pstates, origins)
@@ -309,31 +368,40 @@ def build_strip_plan(
     pitches: Dict[Tuple[int, ImageRegion], int] = {}
     #: per source: list of (pitch_or_None, [row ranges over all k])
     src_reads: Dict[int, List[Tuple[Optional[int], List[Tuple[int, int]]]]] = {}
-    has_coord_reads = False
+    has_window_reads = False
 
-    for i, (parent0, node0, r0) in enumerate(probes[0]):
+    for i, (parent0, node0, r0, win0) in enumerate(probes[0]):
         occs = [p[i][2] for p in probes]
         if any(p[i][1] is not node0 for p in probes):
             raise NotStripParallelizable("graph traversal varies per strip")
         is_src = not pipeline.inputs_of(node0)
-        coord_read = _is_coordinate_read(pipeline, parent0, node0)
         row_ranges = [(r.row0, r.row1) for r in occs]
-        if coord_read:
-            # geometry is free-form; the filter samples by absolute coords
-            has_coord_reads = True
-            src_reads.setdefault(id(node0), []).append((None, row_ranges))
-            continue
-        # covariant edge: constant size, constant integer pitch, no col drift
-        row_pitches = {b.row0 - a.row0 for a, b in zip(occs, occs[1:])}
-        col_drifts = {b.col0 - a.col0 for a, b in zip(occs, occs[1:])}
         if any(a.size != b.size for a, b in zip(occs, occs[1:])):
             raise NotStripParallelizable(
                 f"{node0.name}: requested-region size varies per strip"
             )
+        if win0:
+            # window spec subtree: static shape by construction, origins may
+            # drift freely (the unified path tables them per worker)
+            has_window_reads = True
+            if is_src:
+                src_reads.setdefault(id(node0), []).append((None, row_ranges))
+            continue
+        # covariant edge: constant size, constant integer pitch, no col drift
+        row_pitches = {b.row0 - a.row0 for a, b in zip(occs, occs[1:])}
+        col_drifts = {b.col0 - a.col0 for a, b in zip(occs, occs[1:])}
         if len(row_pitches) > 1 or col_drifts - {0}:
+            hint = (
+                "; declare a window_bound on the requesting needs_origin "
+                "filter to lower the drift to a windowed read"
+                if parent0 is not None
+                and getattr(parent0, "needs_origin", False)
+                else ""
+            )
             raise NotStripParallelizable(
                 f"{node0.name}: requested regions are not translation-covariant "
                 f"(row pitches {sorted(row_pitches)}, col drifts {sorted(col_drifts)})"
+                f"{hint}"
             )
         pitch = row_pitches.pop() if row_pitches else 0  # 0 only when n_workers==1
         pitches[(id(node0), r0)] = pitch
@@ -376,34 +444,42 @@ def build_strip_plan(
     cache = plan_cache if plan_cache is not None else PlanCache()
 
     # --- preferred: the shared canonical plan from the ExecutionPlan layer ---
-    if not has_coord_reads:
-        unified = _try_unified_strip_fn(
-            pipeline, mapper, n_workers, H, cols, out_info, strip_by_source,
-            cache,
+    unified = _try_unified_strip_fn(
+        pipeline, mapper, n_workers, H, cols, out_info, strip_by_source,
+        cache,
+    )
+    if unified is not None:
+        strip_fn, desc = unified
+        return StripPlan(
+            n_workers=n_workers,
+            strip_rows=H,
+            out_info=out_info,
+            source_strips=source_strips,
+            fn=strip_fn,
+            unified=True,
+            plan_signature=desc.signature,
+            program_key=(
+                "spmd", axis_name, n_workers, H, geom, desc.signature,
+            ),
         )
-        if unified is not None:
-            strip_fn, desc = unified
-            return StripPlan(
-                n_workers=n_workers,
-                strip_rows=H,
-                out_info=out_info,
-                source_strips=source_strips,
-                fn=strip_fn,
-                unified=True,
-                plan_signature=desc.signature,
-                program_key=(
-                    "spmd", axis_name, n_workers, H, geom, desc.signature,
-                ),
-            )
+    if has_window_reads:
+        # windowed reads only run through the registry strip body; the legacy
+        # closure below serves masked-persistent covariant graphs only
+        raise NotStripParallelizable(
+            "windowed coordinate reads require the unified ExecutionPlan "
+            "strip path, but the worker strips could not share one canonical "
+            "plan (uneven split, per-strip plan keys, or windows outside the "
+            "halo); use the streaming driver or change the strip geometry"
+        )
 
     # --- fallback: hand-rolled local strip closure (worker-0 geometry) -------
     persistent = pipeline.persistent_nodes()
 
-    def build(node: ProcessObject, region: ImageRegion, ctx, coord_read: bool = False):
+    def build(node: ProcessObject, region: ImageRegion, ctx):
         """Returns (data, (traced_row0, static_col0)) — the array's absolute
         origin.  ctx = dict(arrays={source id: local haloed array},
         axis_idx=traced, pstates={name: state})."""
-        key = (id(node), region, coord_read)
+        key = (id(node), region)
         if key in ctx["memo"]:
             return ctx["memo"][key]
         own_info = infos[id(node)]
@@ -412,34 +488,28 @@ def build_strip_plan(
         if not ups:
             ss = strip_by_source[id(node)]
             local = ctx["arrays"][id(node)]
-            if coord_read:
-                # whole haloed shard, full width; exact traced origin
-                data = local
-                origin = (kk * ss.pitch - ss.halo_top, 0)
-            else:
-                # local array covers absolute rows
-                # [k·pitch − halo_top, (k+1)·pitch + halo_bot)
-                off = region.row0 + ss.halo_top  # worker-0 geometry
-                assert off >= 0, (node.name, region, ss)
-                data = lax.slice_in_dim(local, off, off + region.rows, axis=0)
-                # columns: static clamp + edge pad (requests may spill sideways)
-                c0, c1 = max(0, region.col0), min(own_info.cols, region.col1)
-                data = data[:, c0:c1]
-                pl_, pr_ = c0 - region.col0, region.col1 - c1
-                if pl_ or pr_:
-                    data = jnp.pad(
-                        data,
-                        [(0, 0), (pl_, pr_)] + [(0, 0)] * (data.ndim - 2),
-                        mode="edge",
-                    )
-                origin = (region.row0 + kk * ss.pitch, region.col0)
+            # local array covers absolute rows
+            # [k·pitch − halo_top, (k+1)·pitch + halo_bot)
+            off = region.row0 + ss.halo_top  # worker-0 geometry
+            assert off >= 0, (node.name, region, ss)
+            data = lax.slice_in_dim(local, off, off + region.rows, axis=0)
+            # columns: static clamp + edge pad (requests may spill sideways)
+            c0, c1 = max(0, region.col0), min(own_info.cols, region.col1)
+            data = data[:, c0:c1]
+            pl_, pr_ = c0 - region.col0, region.col1 - c1
+            if pl_ or pr_:
+                data = jnp.pad(
+                    data,
+                    [(0, 0), (pl_, pr_)] + [(0, 0)] * (data.ndim - 2),
+                    mode="edge",
+                )
+            origin = (region.row0 + kk * ss.pitch, region.col0)
         else:
             in_infos = [infos[id(u)] for u in ups]
             reqs = node.requested_region(region, *in_infos)
             node_origin_aware = getattr(node, "needs_origin", False)
             child_results = [
-                build(u, r, ctx, coord_read=_is_coordinate_read(pipeline, node, u))
-                for u, r in zip(ups, reqs)
+                build(u, r, ctx) for u, r in zip(ups, reqs)
             ]
             ins = [d for d, _ in child_results]
             in_origins = [o for _, o in child_results]

@@ -30,6 +30,16 @@ the eager pull.
 Border semantics: at *every* producer→consumer edge, the consumer's request is
 clamped against the producer's largest possible region and edge-replicated
 back out (ITK boundary condition), so requests may safely spill over borders.
+
+Windowed reads: requests made by ``needs_origin`` nodes drift fractionally
+with the output origin, which would give every region its own signature.
+When the node declares :meth:`ProcessObject.window_bound`, every pass (eager
+pull, describe, lower) replaces the exact request with a conservative
+static-shape bounding window (``process_object.window_request``) whose
+absolute origin is a traced scalar, so all regions of one size share a
+single trace.  Windowed reads carry no boundary pads in the trace — border
+spill is edge-replicated at the read stage — so border regions share the
+interior signature too.
 """
 from __future__ import annotations
 
@@ -39,7 +49,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.execplan import PlanDescription
+from repro.core.execplan import PlanDescription, read_plan_sources
 from repro.core.process_object import (
     ImageInfo,
     Mapper,
@@ -47,6 +57,7 @@ from repro.core.process_object import (
     ProcessObject,
     Source,
     boundary_pad,
+    windowed_requests,
 )
 from repro.core.region import ImageRegion
 
@@ -131,6 +142,11 @@ class Pipeline:
         else:
             in_infos = [infos[id(u)] for u in ups]
             reqs = node.requested_region(clamped, *in_infos)
+            # the same window classification as the compiled plans, so the
+            # eager pull is a bit-exact oracle for every executor (windows
+            # shift float origins; needs_origin filters must treat any
+            # request ⊇ the exact one identically up to rounding)
+            reqs, _ = windowed_requests(node, clamped.size, reqs, in_infos)
             inputs = [
                 self.pull(u, r, persistent_hook, cache) for u, r in zip(ups, reqs)
             ]
@@ -191,11 +207,12 @@ class Pipeline:
     def _plan_walk(self, node: ProcessObject, out_region: ImageRegion, lower: bool):
         infos = self.update_information()
         reads: List[Tuple[Source, ImageRegion, ImageRegion]] = []
-        read_index: Dict[Tuple[int, ImageRegion], int] = {}
+        read_windows: List[Optional[Tuple[int, int]]] = []
+        read_index: Dict[Tuple, int] = {}
         origin_values: List[int] = []
         sig: List[Tuple] = []  # canonical step records, built by recursion
         persistent: List[PersistentFilter] = []
-        built: Dict[Tuple[int, ImageRegion], Tuple[int, Callable]] = {}
+        built: Dict[Tuple, Tuple[int, Callable]] = {}
 
         def dyn(value: int) -> int:
             """Register a dynamic (traced) origin scalar; returns its slot."""
@@ -215,8 +232,10 @@ class Pipeline:
 
             return run
 
-        def build(n: ProcessObject, region: ImageRegion) -> Optional[Callable]:
-            key = (id(n), region)
+        def build(
+            n: ProcessObject, region: ImageRegion, in_window: bool = False
+        ) -> Optional[Callable]:
+            key = (id(n), region, in_window)
             if key in built:
                 ordinal, fn = built[key]
                 sig.append(("ref", ordinal))
@@ -233,21 +252,42 @@ class Pipeline:
             )
             ups = self._inputs[id(n)]
             if not ups:
-                k = (id(n), clamped)
+                # non-windowed reads dedup on the clamped rect alone (the
+                # per-consumer spill pad is baked in the trace); windowed
+                # reads pad to their window at the read stage, so the window
+                # region is part of their identity
+                k = (
+                    (id(n), clamped, region, True)
+                    if in_window
+                    else (id(n), clamped)
+                )
                 if k not in read_index:
                     read_index[k] = len(reads)
                     reads.append((n, clamped, region))  # type: ignore[arg-type]
+                    read_windows.append(region.size if in_window else None)
                 idx = read_index[k]
-                sig.append(
-                    ("read", n._serial, idx, clamped.size, pads,
-                     np.dtype(own_info.dtype).str, own_info.bands)
-                )
+                if in_window:
+                    # windowed read: static window shape, no pads in the
+                    # trace — border spill is materialized at the READ stage
+                    # (host boundary_pad / SPMD halo replication), so border
+                    # regions share the interior signature
+                    sig.append(("wread", n._serial, idx, region.size,
+                                np.dtype(own_info.dtype).str, own_info.bands))
+                else:
+                    sig.append(("read", n._serial, idx, clamped.size, pads,
+                                np.dtype(own_info.dtype).str, own_info.bands))
                 fn = None
                 if lower:
+                    if in_window:
 
-                    def run_source(arrays, origins, ctx, _idx=idx,
-                                   _clamped=clamped, _region=region):
-                        return boundary_pad(arrays[_idx], _clamped, _region)
+                        def run_source(arrays, origins, ctx, _idx=idx):
+                            return arrays[_idx]
+
+                    else:
+
+                        def run_source(arrays, origins, ctx, _idx=idx,
+                                       _clamped=clamped, _region=region):
+                            return boundary_pad(arrays[_idx], _clamped, _region)
 
                     fn = memoize(key, run_source)
                 built[key] = (ordinal, fn)
@@ -255,7 +295,14 @@ class Pipeline:
 
             in_infos = [infos[id(u)] for u in ups]
             reqs = n.requested_region(clamped, *in_infos)
-            child_fns = [build(u, r) for u, r in zip(ups, reqs)]
+            # window classification: a needs_origin node's drifting requests
+            # become conservative static-shape windows (traced origins), so
+            # every same-size region lowers to ONE shared trace
+            reqs, wbounds = windowed_requests(n, clamped.size, reqs, in_infos)
+            child_fns = [
+                build(u, r, in_window or wb is not None)
+                for u, r, wb in zip(ups, reqs, wbounds)
+            ]
             origin_aware = bool(getattr(n, "needs_origin", False))
             persist = isinstance(n, PersistentFilter)
             if persist and n not in persistent:
@@ -266,9 +313,10 @@ class Pipeline:
                 if origin_aware
                 else None
             )
+            winb = wbounds if any(b is not None for b in wbounds) else None
             sig.append(
                 ("node", n._serial, clamped.size, pads, origin_aware, persist,
-                 n.plan_key(clamped))
+                 n.plan_key(clamped), winb)
             )
             fn = None
             if lower:
@@ -310,6 +358,7 @@ class Pipeline:
                 signature=tuple(sig),
                 origin_values=static_origins,
                 persistent_nodes=persistent_nodes,
+                windows=tuple(read_windows),
             )
 
         def canonical_fn(arrays, pstates, origins):
@@ -331,6 +380,7 @@ class Pipeline:
             signature=tuple(sig),
             origin_values=static_origins,
             persistent_nodes=persistent_nodes,
+            windows=tuple(read_windows),
         )
 
 
@@ -355,9 +405,12 @@ class PullPlan:
     persistent_nodes: List[PersistentFilter] = dataclasses.field(
         default_factory=list
     )
+    #: per read, the static (rows, cols) window-spec shape for windowed reads
+    #: (``needs_origin`` bounding windows), or None for exact covariant reads
+    windows: Tuple[Optional[Tuple[int, int]], ...] = ()
 
     def read_sources(self) -> List[jnp.ndarray]:
-        return [s.generate(clamped) for s, clamped, _ in self.reads]
+        return read_plan_sources(self.reads, self.windows)
 
     def origins(self) -> Tuple[np.int32, ...]:
         """Per-region dynamic origin scalars, in canonical slot order.  Passed

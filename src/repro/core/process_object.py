@@ -147,6 +147,32 @@ class ProcessObject:
         *traced* absolute coordinates use ``needs_origin`` instead."""
         return None
 
+    def window_bound(
+        self, out_size: Tuple[int, int], *input_infos: ImageInfo
+    ) -> Tuple[Optional[Tuple[int, int]], ...]:
+        """Static per-input bound on ``requested_region`` size — the *window
+        spec* hook of the plan layer's windowed reads.
+
+        A ``needs_origin`` filter whose requested regions drift fractionally
+        with the output origin (warps) makes every region's plan signature
+        unique, forcing one trace per region.  Returning a conservative
+        static ``(rows, cols)`` bound here — valid for *any* output region of
+        ``out_size``, whatever its origin — lets the plan layer replace the
+        exact drifting request with a fixed-shape bounding window anchored at
+        the request origin (columns shifted in-image).  The window's absolute
+        origin is threaded into the compiled function as traced scalars
+        (``input_origins``), so every region of one size shares a single
+        trace, and the SPMD driver lowers the window to a
+        ``jax.lax.dynamic_slice`` of the halo-exchanged shard.
+
+        Only consulted for ``needs_origin`` filters, which must sample purely
+        by absolute coordinates (``origin`` / ``input_origins``) with
+        edge-clamped out-of-window taps — the window is then exactly
+        equivalent to the eager pull's edge-padded exact request.  Return
+        ``None`` for an input to keep its exact request (no windowing).
+        """
+        return tuple(None for _ in range(self.n_inputs))
+
     def __repr__(self) -> str:
         return f"<{type(self).__name__} {self.name!r}>"
 
@@ -262,6 +288,60 @@ class Mapper(ProcessObject):
     def generate(self, out_region: ImageRegion, *inputs: jnp.ndarray) -> jnp.ndarray:
         # mappers pass pixels through unchanged (identity in the data graph)
         return inputs[0]
+
+
+def window_request(
+    req: ImageRegion, bound: Tuple[int, int], in_info: ImageInfo
+) -> ImageRegion:
+    """Replace an exact (drifting) request with its static-shape bounding
+    window — the canonical *window spec* of the plan layer.
+
+    Rows are anchored at the request origin: spill past the image border is
+    clamped + edge-padded like any other request (interior windows stay
+    pad-free, so interior regions share one signature; the SPMD driver
+    realizes the spill by halo edge-replication instead).  Columns are
+    shifted in-image where possible (full-width strips would otherwise bake
+    per-region column pads into the signature); shifting is sound because
+    ``needs_origin`` consumers sample by absolute coordinates and their
+    out-of-window taps edge-clamp exactly where the image edge lies.
+    """
+    wrows, wcols = bound
+    if req.rows > wrows or req.cols > wcols:
+        raise ValueError(
+            f"window_bound {bound} smaller than requested region {req.size} — "
+            "the bound must be conservative for every output region of its size"
+        )
+    c0 = max(0, min(req.col0, in_info.cols - wcols))
+    return ImageRegion((req.row0, c0), (wrows, wcols))
+
+
+def windowed_requests(
+    node: ProcessObject,
+    out_size: Tuple[int, int],
+    reqs: Sequence[ImageRegion],
+    in_infos: Sequence[ImageInfo],
+) -> Tuple[Tuple[ImageRegion, ...], Tuple[Optional[Tuple[int, int]], ...]]:
+    """Apply window classification to one node's requests.
+
+    Returns ``(requests, bounds)``: per input, the window region (when the
+    node is ``needs_origin`` and declares a bound) or the exact request, plus
+    the static bound (``None`` for unwindowed inputs).  Shared by the
+    describe/lower walk and the SPMD strip prober so both see identical
+    window geometry.
+    """
+    if not getattr(node, "needs_origin", False):
+        return tuple(reqs), tuple(None for _ in reqs)
+    bounds = tuple(node.window_bound(out_size, *in_infos))
+    if len(bounds) != len(reqs):
+        raise ValueError(
+            f"{node.name}: window_bound returned {len(bounds)} entries for "
+            f"{len(reqs)} inputs"
+        )
+    out = tuple(
+        window_request(r, b, info) if b is not None else r
+        for r, b, info in zip(reqs, bounds, in_infos)
+    )
+    return out, bounds
 
 
 def boundary_pad(

@@ -11,23 +11,30 @@ Three layers make the hot loop run at hardware speed:
      folds every shape/boundary-static quantity into a plan signature; the
      lower pass builds the closure threading absolute coordinates
      (``needs_origin``) and persistent-filter state through the pure function
-     as traced arguments.
+     as traced arguments.  Drifting warp requests are classified as
+     *windowed reads* (static-shape bounding windows, traced origins — see
+     ``ProcessObject.window_bound``), so a striped warp run shares ONE
+     signature across every stripe, borders included.
   2. **PlanCache** — the shared compiled-plan registry of the ExecutionPlan
      layer (:mod:`repro.core.execplan`), keyed by plan signature.  A uniform
      stripe split compiles exactly once per distinct signature (interior
      stripes share one entry; border stripes with different clamp/pad
-     geometry get their own), and registry *hits* run the cheap describe
-     pass only — the lower pass (closure construction) happens on misses.
+     geometry get their own — except windowed reads, whose border spill is
+     materialized at the read stage and which therefore share the interior
+     entry), and registry *hits* run the cheap describe pass only — the
+     lower pass (closure construction) happens on misses.
      Hit/miss/compile/lower/eviction counts are surfaced in
      ``StreamResult.cache_stats``; the same registry serves the SPMD
      :class:`~repro.core.parallel.ParallelExecutor`.
   3. **Async double buffering** — with ``prefetch=k``, source reads for the
      next ``k`` regions run on a thread pool while the device computes the
      current one, and ``mapper.consume`` is handed to a background writer
-     behind a bounded queue.  In-flight memory stays bounded at roughly
-     ``2·prefetch + 2`` region buffers (k read-ahead + one computing +
-     k + 1 queued writes), preserving the paper's memory-budget guarantee
-     with a constant factor.
+     behind a bounded queue.  Windowed reads prefetch the full static-shape
+     window (edge-replicating any border spill host-side), so the hot loop
+     feeds fixed-shape buffers to one compiled function.  In-flight memory
+     stays bounded at roughly ``2·prefetch + 2`` region buffers (k
+     read-ahead + one computing + k + 1 queued writes), preserving the
+     paper's memory-budget guarantee with a constant factor.
 
 Pipelines containing :class:`PersistentFilter` nodes run through the compiled
 path too: state is carried across regions as

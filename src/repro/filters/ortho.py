@@ -85,6 +85,25 @@ class Orthorectify(Filter):
         c1 = int(np.ceil(max(c for _, c in corners) + margin)) + 1
         return (ImageRegion((r0, c0), (r1 - r0, c1 - c0)),)
 
+    def window_bound(self, out_size, info):
+        """Static bounding-window shape for any output region of ``out_size``.
+
+        The affine span over the region's corners depends only on the region
+        *size*; the fractional origin drift plus the floor/ceil rounding of
+        :meth:`requested_region` is bounded by 3 pixels per axis (floor
+        loses < 1, ceil gains < 1, plus the +1 exclusive end).  With this
+        bound the plan layer folds every same-size ortho request into one
+        windowed-read trace instead of one trace per region.
+        """
+        h, w = out_size
+        m = self.model
+        margin = m.disp_amp + self.support + 1
+        rspan = abs(m.a_rr) * (h - 1) + abs(m.a_rc) * (w - 1)
+        cspan = abs(m.a_cr) * (h - 1) + abs(m.a_cc) * (w - 1)
+        rows = int(math.ceil(rspan + 2.0 * margin)) + 3
+        cols = int(math.ceil(cspan + 2.0 * margin)) + 3
+        return ((rows, cols),)
+
     def generate(self, out_region: ImageRegion, x: jnp.ndarray,
                  origin=None, input_origins=None) -> jnp.ndarray:
         if origin is None:
@@ -93,24 +112,39 @@ class Orthorectify(Filter):
             input_origins = (self.requested_region(out_region, None)[0].index,)
         m = self.model
         H, W = out_region.rows, out_region.cols
-        in_r0 = jnp.asarray(input_origins[0][0], jnp.float32)
-        in_c0 = jnp.asarray(input_origins[0][1], jnp.float32)
         # absolute output coords (row origin may be traced under SPMD);
         # float32 keeps sub-0.1px precision through ~10⁶-row rasters
         rr = jnp.arange(H, dtype=jnp.float32)[:, None] + jnp.asarray(origin[0], jnp.float32)
         cc = jnp.arange(W, dtype=jnp.float32)[None, :] + jnp.asarray(origin[1], jnp.float32)
         ar, ac = m.affine(rr, cc)
         dr, dc = m.displacement(rr, cc)
-        return bicubic_sample(x.astype(jnp.float32), ar + dr - in_r0, ac + dc - in_c0)
+        # sample at ABSOLUTE coords; the array origin is subtracted in integer
+        # index space only, so the interpolation weights are bitwise identical
+        # whatever window/request decomposition delivered x (the windowed-read
+        # equivalence the cross-executor differential harness asserts)
+        return bicubic_sample(x.astype(jnp.float32), ar + dr, ac + dc,
+                              origin=input_origins[0])
 
 
-def bicubic_sample(x: jnp.ndarray, src_r: jnp.ndarray, src_c: jnp.ndarray) -> jnp.ndarray:
-    """Sample (rows, cols, bands) at fractional coords (H, W) → (H, W, bands)."""
+def bicubic_sample(x: jnp.ndarray, src_r: jnp.ndarray, src_c: jnp.ndarray,
+                   origin=(0, 0)) -> jnp.ndarray:
+    """Sample (rows, cols, bands) at fractional coords (H, W) → (H, W, bands).
+
+    ``src_r``/``src_c`` are absolute source coordinates; ``origin`` is the
+    absolute (row, col) of ``x[0, 0]`` (possibly traced int scalars).  The
+    fractional parts come from the absolute coordinates and the origin is
+    applied as an exact integer shift of the gather index, so results do not
+    depend on which bounding window of the source was materialized; taps
+    outside ``x`` edge-clamp (matching ``boundary_pad`` replication when the
+    window is flush with the image border).
+    """
     n_r, n_c = x.shape[0], x.shape[1]
-    br = jnp.floor(src_r).astype(jnp.int32)
-    bc = jnp.floor(src_c).astype(jnp.int32)
-    tr = src_r - br
-    tc = src_c - bc
+    fr = jnp.floor(src_r)
+    fc = jnp.floor(src_c)
+    tr = src_r - fr
+    tc = src_c - fc
+    br = fr.astype(jnp.int32) - jnp.asarray(origin[0], jnp.int32)
+    bc = fc.astype(jnp.int32) - jnp.asarray(origin[1], jnp.int32)
     wr = _cubic_w(tr)  # (H, W, 4)
     wc = _cubic_w(tc)
     flat = x.reshape(-1, x.shape[-1])

@@ -1,0 +1,52 @@
+"""The benchmark harness must fail LOUDLY: a raising bench or a typo'd
+section name exits non-zero instead of silently printing a shorter CSV
+(the CI smoke job greps this contract)."""
+import os
+import pathlib
+import subprocess
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+
+def _run(code=None, argv=(), timeout=600):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src") + os.pathsep + env.get("PYTHONPATH", "")
+    cmd = (
+        [sys.executable, "-c", code]
+        if code is not None
+        else [sys.executable, "-m", "benchmarks.run", *argv]
+    )
+    return subprocess.run(
+        cmd, capture_output=True, text=True, timeout=timeout, env=env,
+        cwd=str(REPO),
+    )
+
+
+def test_unknown_section_exits_nonzero():
+    proc = _run(argv=["--only", "doesnotexist", "--quick"])
+    assert proc.returncode == 2, (proc.stdout, proc.stderr)
+    assert "unknown benchmark section" in proc.stderr
+
+
+def test_raising_bench_exits_nonzero():
+    code = (
+        "import sys\n"
+        "from benchmarks import run\n"
+        "run.SECTIONS['boom'] = ('benchmarks.does_not_exist',\n"
+        "                        lambda mod, args: mod.run())\n"
+        "sys.exit(run.main(['--only', 'boom', '--quick']))\n"
+    )
+    proc = _run(code=code)
+    assert proc.returncode == 1, (proc.stdout, proc.stderr)
+    assert "FAILED boom" in proc.stderr
+    # the CSV header still prints so partial results remain parseable
+    assert "name,us_per_call,derived" in proc.stdout
+
+
+def test_quick_balancing_smoke_emits_csv():
+    proc = _run(argv=["--only", "balancing", "--quick"])
+    assert proc.returncode == 0, (proc.stdout[-2000:], proc.stderr[-2000:])
+    lines = [l for l in proc.stdout.splitlines() if l and not l.startswith("#")]
+    assert lines[0] == "name,us_per_call,derived"
+    assert len(lines) > 1, proc.stdout  # at least one data row

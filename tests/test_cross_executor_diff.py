@@ -1,0 +1,168 @@
+"""Cross-executor differential harness — the tier-1 home of the plan-layer
+equivalence guarantees (PR 3 registry sharing + windowed reads).
+
+Every registered pipeline (P1–P7 + IO) runs against the eager pull oracle on
+every engine: streaming (prefetch 0 and 2), the work-stealing thread pool,
+and the shard_map SPMD executor on 2/4/8 virtual devices.  The contract:
+
+  * all compiled executors produce BIT-IDENTICAL outputs — one registry, one
+    canonical trace per signature; windowed reads make this hold for the P1
+    warp too (absolute-coordinate sampling + static window shapes);
+  * the second and later executors on one strip geometry record zero new
+    lowers and zero new compiles (registry hits only), and every P1–P7
+    pipeline takes the unified SPMD strip path (no legacy closure);
+  * outputs equal the eager oracle bit-exactly for fusion-insensitive
+    pipelines, and within float tolerance for the bicubic ones (P1/P3/P7):
+    under jit XLA contracts mul+add chains into FMAs, the eager pull
+    dispatches per-op, so the same math rounds ~1 ulp apart.
+"""
+import numpy as np
+import pytest
+
+from repro import pipelines as PP
+from repro.core import PlanCache, StreamingExecutor, StripeSplitter, run_pool
+from repro.raster import SyntheticScene, make_spot6_pair
+
+
+def _src(rows=48, cols=32):
+    return SyntheticScene(rows, cols, bands=4, dtype=np.float32)
+
+
+#: name -> (builder, eager_exact); eager_exact means the jitted executors are
+#: expected to match the eager pull bit-for-bit (no FMA-sensitive math)
+CASES = {
+    # P1's warp halo needs >= 12-row strips (96 rows / 8 workers)
+    "P1": (lambda: PP.p1_orthorectification(_src(96, 64)), False),
+    "P2": (lambda: PP.p2_textures(_src(), radius=2, levels=4), True),
+    "P3": (lambda: PP.p3_pansharpening(*make_spot6_pair(24, 16)), False),
+    "P4": (lambda: PP.p4_classification(_src()), True),
+    "P5": (lambda: PP.p5_meanshift(_src(), hs=2, n_iter=2), True),
+    "P6": (lambda: PP.p6_conversion(_src()), True),
+    "P7": (lambda: PP.p7_resampling(_src(32, 24)), False),
+    "IO": (lambda: PP.io_passthrough(_src()), True),
+}
+
+
+def _assert_oracle(name, got, oracle, exact):
+    if exact:
+        np.testing.assert_array_equal(got, oracle, err_msg=f"{name} != oracle")
+    else:
+        np.testing.assert_allclose(
+            got.astype(np.float64), oracle.astype(np.float64),
+            rtol=1e-4, atol=1e-3, err_msg=f"{name} != oracle",
+        )
+
+
+# -- in-process matrix: eager oracle × streaming(0/2) × pool ------------------
+@pytest.mark.parametrize("name", list(CASES))
+def test_streaming_and_pool_differential(name):
+    build, eager_exact = CASES[name]
+    p, m = build()
+    info = p.info(m)
+    oracle = np.asarray(p.pull(m, info.full_region))
+
+    cache = PlanCache()
+    splitter = StripeSplitter(n_splits=6)
+    res0 = StreamingExecutor(
+        p, m, splitter, plan_cache=cache, prefetch=0
+    ).run()
+    ref = np.array(m.result)
+    assert res0.cache_stats is cache.stats
+    _assert_oracle(name, ref, oracle, eager_exact)
+    lowers0, compiles0 = cache.stats.lowers, cache.stats.compiles
+
+    # second executor, same geometry: bit-identical, zero new lowers/compiles
+    StreamingExecutor(p, m, splitter, plan_cache=cache, prefetch=2).run()
+    np.testing.assert_array_equal(m.result, ref, err_msg=f"{name} prefetch=2")
+    assert cache.stats.lowers == lowers0, (name, cache.stats)
+    assert cache.stats.compiles == compiles0, (name, cache.stats)
+
+    res = run_pool(p, m, splitter, n_workers=3, plan_cache=cache)
+    np.testing.assert_array_equal(m.result, ref, err_msg=f"{name} pool")
+    assert res.cache_stats is cache.stats
+    assert cache.stats.lowers == lowers0, (name, cache.stats)
+    assert cache.stats.compiles == compiles0, (name, cache.stats)
+
+
+# -- SPMD matrix: 2/4/8 virtual devices (subprocess-isolated) -----------------
+CODE_SPMD_DIFF = r"""
+import numpy as np
+from repro import pipelines as PP
+from repro.core import PlanCache, StreamingExecutor, StripeSplitter
+from repro.core.parallel import ParallelExecutor
+from repro.raster import SyntheticScene, make_spot6_pair
+
+N = {devices}
+
+def src(rows=48, cols=32):
+    return SyntheticScene(rows, cols, bands=4, dtype=np.float32)
+
+CASES = {{
+    "P1": (lambda: PP.p1_orthorectification(src(96, 64)), False),
+    "P2": (lambda: PP.p2_textures(src(), radius=2, levels=4), True),
+    "P3": (lambda: PP.p3_pansharpening(*make_spot6_pair(24, 16)), False),
+    "P4": (lambda: PP.p4_classification(src()), True),
+    "P5": (lambda: PP.p5_meanshift(src(), hs=2, n_iter=2), True),
+    "P6": (lambda: PP.p6_conversion(src()), True),
+    "P7": (lambda: PP.p7_resampling(src(32, 24)), False),
+    "IO": (lambda: PP.io_passthrough(src()), True),
+}}
+
+for name, (build, eager_exact) in CASES.items():
+    p, m = build()
+    info = p.info(m)
+    oracle = np.asarray(p.pull(m, info.full_region))
+    cache = PlanCache()
+    # matching strip geometry: N stripes == N SPMD strips
+    StreamingExecutor(
+        p, m, StripeSplitter(n_splits=N), plan_cache=cache, prefetch=0
+    ).run()
+    streamed = np.array(m.result)
+    lowers0, compiles0 = cache.stats.lowers, cache.stats.compiles
+    hits0 = cache.stats.hits
+
+    pe = ParallelExecutor(p, m, plan_cache=cache)
+    res = pe.run()
+    # P1's windowed reads are pad-free, so the warp shares one trace at ANY
+    # worker count; halo pipelines need an interior strip (>= 3 workers) to
+    # share the border-free signature and fall back to the legacy covariant
+    # closure at N == 2 (pre-existing geometry limit, still bit-identical)
+    if N >= 3 or name in ("P1", "P4", "P6", "IO"):
+        assert pe.plan.unified, (name, "fell off the unified strip path")
+    assert res.cache_stats is cache.stats, name
+    # the acceptance bar: the second executor records registry HITS only —
+    # zero new jax traces, zero new closure trees
+    assert cache.stats.lowers == lowers0, (name, cache.stats)
+    assert cache.stats.compiles == compiles0, (name, cache.stats)
+    if pe.plan.unified:
+        assert cache.stats.hits > hits0, (name, cache.stats)
+    np.testing.assert_array_equal(
+        np.asarray(m.result), streamed,
+        err_msg=f"{{name}}: spmd not bit-identical to streaming")
+    if eager_exact:
+        np.testing.assert_array_equal(
+            np.asarray(m.result), oracle,
+            err_msg=f"{{name}}: spmd not bit-identical to eager oracle")
+    else:
+        np.testing.assert_allclose(
+            np.asarray(m.result).astype(np.float64), oracle.astype(np.float64),
+            rtol=1e-4, atol=1e-3, err_msg=f"{{name}}: spmd != eager oracle")
+
+    # a third executor on the same geometry reuses the registered program
+    hits1 = cache.stats.hits
+    ParallelExecutor(p, m, plan_cache=cache).run()
+    np.testing.assert_array_equal(np.asarray(m.result), streamed)
+    assert cache.stats.lowers == lowers0, (name, cache.stats)
+    assert cache.stats.compiles == compiles0, (name, cache.stats)
+    assert cache.stats.hits >= hits1 + (2 if pe.plan.unified else 1), (
+        name, cache.stats)
+
+print("SPMD_DIFF_OK", N)
+"""
+
+
+@pytest.mark.parametrize("devices", [2, 4, 8])
+def test_spmd_differential_matrix(subproc, devices):
+    out = subproc(CODE_SPMD_DIFF.format(devices=devices), devices=devices,
+                  timeout=1800)
+    assert f"SPMD_DIFF_OK {devices}" in out

@@ -3,12 +3,13 @@
 Covers: describe-pass signatures are identical to the lowered plan's;
 registry hits run zero lower passes (no closure rebuild); the process-wide
 registry; cross-executor sharing — a pipeline streamed first is a registry
-*hit* (zero new compiles, zero new lowers) for the thread pool and for the
-shard_map SPMD executor on matching strip geometry.  P1–P7 outputs agree
-with the eager oracle across executors: exactly on the pool path (same
-traces), and within float tolerance on the SPMD path, whose halo rows fuse
-differently at image borders.
+*hit* (zero new compiles, zero new lowers) for the thread pool; registry
+counter consistency under concurrent races and LRU eviction.  The full
+pipeline × executor equivalence matrix (streaming / pool / SPMD 2-4-8
+devices vs the eager oracle) lives in tests/test_cross_executor_diff.py.
 """
+import threading
+
 import numpy as np
 import pytest
 
@@ -164,80 +165,107 @@ def test_run_pipeline_prebuilt_pair_reuses_plans_across_executors():
     )
 
 
-# -- cross-executor sharing: streaming then SPMD (8 virtual devices) ----------
-CODE_CROSS_EXECUTOR = r"""
-import numpy as np
-from repro import pipelines as PP
-from repro.core import PlanCache, StreamingExecutor, StripeSplitter
-from repro.core.parallel import ParallelExecutor
-from repro.raster import SyntheticScene, make_spot6_pair
+# -- registry counter consistency under concurrent races ----------------------
+def _spin_barrier_run(n_threads, fn):
+    barrier = threading.Barrier(n_threads)
+    errors = []
 
-N = 8
+    def run(w):
+        try:
+            barrier.wait()
+            fn(w)
+        except BaseException as e:  # noqa: BLE001 — surfaced below
+            errors.append(e)
 
-def src(rows=48, cols=32):
-    return SyntheticScene(rows, cols, bands=4, dtype=np.float32)
+    threads = [threading.Thread(target=run, args=(w,)) for w in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors, errors
 
-CASES = {
-    # P1's warp halo needs >= 12-row strips (96 rows / 8 workers)
-    "P1": lambda: PP.p1_orthorectification(src(96, 64)),
-    "P2": lambda: PP.p2_textures(src(), radius=2, levels=4),
-    "P3": lambda: PP.p3_pansharpening(*make_spot6_pair(24, 16)),
-    "P4": lambda: PP.p4_classification(src()),
-    "P5": lambda: PP.p5_meanshift(src(), hs=2, n_iter=2),
-    "P6": lambda: PP.p6_conversion(src()),
-    "P7": lambda: PP.p7_resampling(src(32, 24)),
-}
 
-unified = {}
-for name, build in CASES.items():
-    p, m = build()
+def test_plan_cache_unbounded_concurrent_races_lower_once_per_signature():
+    """Racing compiled_for calls may both run the lower callback, but the
+    registry counts exactly one lower/miss per signature (first insert wins)
+    and every other call is a hit — no signature is lowered twice in the
+    stats without an eviction in between."""
+    p, m = PP.p6_conversion(SyntheticScene(40, 16, bands=2, dtype=np.float32))
     info = p.info(m)
-    oracle = np.asarray(p.pull(m, info.full_region)).astype(np.float64)
+    regions = StripeSplitter(n_splits=4).split(info.full_region, info)
+    descs = [p.describe_pull(m, r) for r in regions]
+    # all four stripes share one signature (uniform split, no halos)
+    signatures = {d.signature for d in descs}
     cache = PlanCache()
-    # matching strip geometry: 8 stripes == 8 SPMD strips
-    StreamingExecutor(
-        p, m, StripeSplitter(n_splits=N), plan_cache=cache, prefetch=0
-    ).run()
-    streamed = np.asarray(m.result).astype(np.float64)
-    np.testing.assert_allclose(streamed, oracle, rtol=1e-4, atol=1e-3,
-                               err_msg=f"{name}: streaming != oracle")
-    compiles0, lowers0 = cache.stats.compiles, cache.stats.lowers
-    hits0 = cache.stats.hits
+    n_threads, reps = 8, 5
 
-    pe = ParallelExecutor(p, m, plan_cache=cache)
-    res = pe.run()
-    spmd = np.asarray(m.result).astype(np.float64)
-    np.testing.assert_allclose(spmd, oracle, rtol=1e-4, atol=1e-3,
-                               err_msg=f"{name}: spmd != oracle")
-    assert res.cache_stats is cache.stats, name
-    unified[name] = pe.plan.unified
-    if pe.plan.unified:
-        # the acceptance bar: the second executor records registry HITS —
-        # zero new jax traces, zero new closure trees
-        assert cache.stats.compiles == compiles0, (name, cache.stats)
-        assert cache.stats.lowers == lowers0, (name, cache.stats)
-        assert cache.stats.hits > hits0, (name, cache.stats)
+    def work(w):
+        for rep in range(reps):
+            d = descs[(w + rep) % len(descs)]
+            entry = cache.compiled_for(d, lambda d=d: p.lower_pull(d))
+            assert entry is not None
 
-        # a second SPMD executor reuses the registered program outright
-        hits1 = cache.stats.hits
-        ParallelExecutor(p, m, plan_cache=cache).run()
-        np.testing.assert_allclose(
-            np.asarray(m.result).astype(np.float64), oracle,
-            rtol=1e-4, atol=1e-3)
-        assert cache.stats.compiles == compiles0, (name, cache.stats)
-        assert cache.stats.lowers == lowers0, (name, cache.stats)
-        assert cache.stats.hits >= hits1 + 2, (name, cache.stats)
-
-print("UNIFIED", sorted(k for k, v in unified.items() if v))
-# P1's warp needs coordinate reads (whole-shard + traced origins) → legacy;
-# every covariant pipeline must share one trace with the streaming stripes
-assert not unified["P1"]
-for name in ("P2", "P3", "P4", "P5", "P6", "P7"):
-    assert unified[name], f"{name} fell off the unified path"
-print("CROSS_EXECUTOR_OK")
-"""
+    _spin_barrier_run(n_threads, work)
+    total = n_threads * reps
+    s = cache.stats
+    assert s.hits + s.misses == total
+    assert s.misses == s.lowers == len(signatures) == len(cache)
+    assert s.evictions == 0
 
 
-def test_cross_executor_bit_identity_and_registry_hits(subproc):
-    out = subproc(CODE_CROSS_EXECUTOR, devices=8, timeout=1800)
-    assert "CROSS_EXECUTOR_OK" in out
+def test_plan_cache_lru_eviction_under_concurrent_get_or_build():
+    """Threaded stress over more signatures than max_entries: counters stay
+    consistent (hits + misses == calls, inserts == misses, evictions ==
+    inserts - live entries) and re-building an evicted key is a counted miss,
+    never a silent double-build of a live entry."""
+    cache = PlanCache(max_entries=4)
+    n_threads, n_keys, reps = 8, 12, 40
+    built = []
+    built_lock = threading.Lock()
+
+    def work(w):
+        rng = np.random.default_rng(w)
+        for _ in range(reps):
+            key = ("prog", int(rng.integers(n_keys)))
+
+            def build(key=key):
+                with built_lock:
+                    built.append(key)
+                return object()
+
+            assert cache.get_or_build(key, build) is not None
+
+    _spin_barrier_run(n_threads, work)
+    s = cache.stats
+    total = n_threads * reps
+    assert s.hits + s.misses == total
+    assert len(cache) <= 4
+    assert s.evictions == s.misses - len(cache)
+    # racing builds may overshoot the counted misses, but never undershoot:
+    # every counted miss ran a build
+    assert s.misses <= len(built)
+    assert s.evictions > 0  # the stress actually exercised LRU churn
+
+
+def test_plan_cache_eviction_then_rebuild_is_counted_miss():
+    p, m = PP.p6_conversion(SyntheticScene(48, 16, bands=1, dtype=np.float32))
+    info = p.info(m)
+    # distinct stripe heights → two distinct signatures
+    r0 = StripeSplitter(n_splits=2).split(info.full_region, info)[0]
+    r1 = StripeSplitter(n_splits=3).split(info.full_region, info)[0]
+    assert r0.size != r1.size
+    cache = PlanCache(max_entries=1)
+    d0, d1 = p.describe_pull(m, r0), p.describe_pull(m, r1)
+    lower_calls = []
+
+    def lower(d):
+        lower_calls.append(d.signature)
+        return p.lower_pull(d)
+
+    cache.compiled_for(d0, lambda: lower(d0))
+    cache.compiled_for(d1, lambda: lower(d1))  # evicts d0's entry
+    assert cache.stats.evictions == 1
+    cache.compiled_for(d0, lambda: lower(d0))  # rebuild after eviction
+    assert lower_calls.count(d0.signature) == 2
+    assert cache.stats.lowers == 3 and cache.stats.misses == 3
+    assert cache.stats.hits == 0
