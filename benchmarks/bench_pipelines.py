@@ -17,7 +17,7 @@ the I/O fraction (paper §III.A) — benchmarked separately in bench_io.
 from __future__ import annotations
 
 import time
-from typing import Dict, List
+from typing import List
 
 import numpy as np
 

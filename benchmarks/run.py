@@ -1,20 +1,33 @@
 """Benchmark harness — one module per paper table/figure + roofline.
 
     PYTHONPATH=src python -m benchmarks.run [--only io,pipelines,...]
+                                            [--snapshot BENCH.json]
 
 Prints ``name,us_per_call,derived`` CSV rows (derived: speedup for I/O,
 partition efficiency for pipelines, makespan ratio for balancing,
 Mpixel/s-Mtoken/s for kernels, roofline fraction for the dry-run cells).
+Section order follows ``--only``, so consumers must key on row *names*, not
+on row positions.
+
+``--snapshot PATH`` additionally writes a machine-readable JSON perf
+snapshot (every row, plus the headline plan-layer metrics: describe-pass
+hit cost, lower/describe cost ratio, streaming speedups, compile counts) —
+CI uploads one per run so the perf trajectory accumulates comparable
+points across PRs.
 
 A benchmark that raises makes the harness exit non-zero (the CI smoke job
-depends on this — a silently-skipped bench reads as "passed").  The only
-tolerated skip is the roofline section, which needs dry-run artifacts that a
-fresh checkout has not generated yet; its skip is announced on stderr.
+depends on this — a silently-skipped bench reads as "passed").  An unknown
+``--only`` section name exits non-zero listing the valid names (with a
+did-you-mean hint for near-misses).  The only tolerated skip is the
+roofline section, which needs dry-run artifacts that a fresh checkout has
+not generated yet; its skip is announced on stderr.
 """
 from __future__ import annotations
 
 import argparse
+import difflib
 import importlib
+import json
 import sys
 import traceback
 
@@ -31,6 +44,37 @@ SECTIONS = {
     "roofline": ("benchmarks.bench_roofline", lambda mod, args: mod.run()),
 }
 
+#: snapshot headline metrics: key -> (csv row name, which csv column)
+_SNAPSHOT_METRICS = {
+    "plan_describe_hit_cost_us": ("plan_describe_pass_us", "us_per_call"),
+    "plan_lower_over_describe": ("plan_describe_pass_us", "derived"),
+    "streaming_speedup_vs_rejit": ("streaming_P2_engine_cached", "derived"),
+    "streaming_async_speedup_vs_rejit": ("streaming_P2_engine_async", "derived"),
+    "streaming_compile_count": ("streaming_P2_compiles", "us_per_call"),
+}
+
+
+def write_snapshot(path: str, rows, sections) -> None:
+    """Write the JSON perf snapshot: every CSV row keyed by name, plus the
+    headline plan-layer metrics when their rows ran in this invocation."""
+    by_name = {
+        name: {"us_per_call": us, "derived": derived}
+        for name, us, derived in rows
+    }
+    metrics = {
+        key: by_name[row][col]
+        for key, (row, col) in _SNAPSHOT_METRICS.items()
+        if row in by_name
+    }
+    with open(path, "w") as f:
+        json.dump(
+            {"sections": list(sections), "metrics": metrics, "rows": by_name},
+            f,
+            indent=2,
+            sort_keys=True,
+        )
+        f.write("\n")
+
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
@@ -39,13 +83,24 @@ def main(argv=None) -> int:
         "--quick", action="store_true",
         help="fast smoke path (CI): benches that support it skip slow sweeps",
     )
+    ap.add_argument(
+        "--snapshot", default=None, metavar="PATH",
+        help="also write a JSON perf snapshot (rows + headline metrics)",
+    )
     args = ap.parse_args(argv)
     wanted = [w for w in args.only.split(",") if w]
     unknown = [w for w in wanted if w not in SECTIONS]
     if unknown:
+        hints = []
+        for w in unknown:
+            close = difflib.get_close_matches(w, SECTIONS, n=1)
+            if close:
+                hints.append(f"{w!r} (did you mean {close[0]!r}?)")
+            else:
+                hints.append(repr(w))
         print(
-            f"unknown benchmark section(s) {unknown}; "
-            f"known: {sorted(SECTIONS)}",
+            f"unknown benchmark section(s) {', '.join(hints)}; "
+            f"valid sections: {', '.join(sorted(SECTIONS))}",
             file=sys.stderr,
         )
         return 2
@@ -68,6 +123,8 @@ def main(argv=None) -> int:
     print("name,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived:.4f}")
+    if args.snapshot:
+        write_snapshot(args.snapshot, rows, wanted)
     if failures:
         for name, e in failures:
             print(f"# FAILED {name}: {e!r}", file=sys.stderr)

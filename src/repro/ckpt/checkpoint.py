@@ -16,7 +16,6 @@ Layout:
 """
 from __future__ import annotations
 
-import dataclasses
 import hashlib
 import json
 import os
@@ -27,7 +26,7 @@ from concurrent.futures import ThreadPoolExecutor
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
-import ml_dtypes  # registers bfloat16 etc. with numpy
+import ml_dtypes  # noqa: F401 — side-effect: registers bfloat16 with numpy
 import numpy as np
 
 

@@ -9,7 +9,7 @@ tied to weight divisibility; DP/FSDP degree is free).
 """
 from __future__ import annotations
 
-from typing import List, Optional, Sequence, Tuple
+from typing import Sequence, Tuple
 
 import jax
 import numpy as np

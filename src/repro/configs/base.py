@@ -8,7 +8,6 @@ provides precomputed patch/frame embeddings).
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Optional, Tuple
 
 

@@ -48,6 +48,20 @@ interior regions of one size share one signature, the streaming engine
 prefetches fixed-shape windows, and the SPMD executor lowers the same entry
 to ``lax.dynamic_slice`` of the halo-exchanged shard — one trace per
 geometry signature on every engine.
+
+Virtual padded strips make it total over *arbitrary strip geometry*: the
+describe pass can run against a virtually row-padded image
+(``describe_pull(..., virtual=True)``), in which no request ever clamps in
+the row direction, so the ragged last strip of an uneven split — and both
+border strips of an n=2 halo split — describe exactly like interior strips
+and *share the interior signature*.  The resulting :class:`PlanDescription`
+carries the pad metadata (``virtual`` flag + ``pad_rows``, the trailing
+output rows beyond the real image) OUTSIDE the signature: registry lookup
+still lands on the one interior entry, the read stage materializes the
+spilled rows by edge replication (:func:`read_plan_sources` host-side, halo
+replication of the row-padded global under SPMD), mask-aware persistent
+filters accumulate under an in-trace validity mask derived from their traced
+row origin, and the executor crops the pad rows before the write stage.
 """
 from __future__ import annotations
 
@@ -60,11 +74,11 @@ import jax
 import numpy as np
 
 from repro.core.process_object import boundary_pad
+from repro.core.region import ImageRegion
 
 if TYPE_CHECKING:  # pragma: no cover — typing only, avoids an import cycle
     from repro.core.pipeline import PullPlan
     from repro.core.process_object import PersistentFilter, ProcessObject, Source
-    from repro.core.region import ImageRegion
 
 
 @dataclasses.dataclass
@@ -90,6 +104,12 @@ def read_plan_sources(reads, windows) -> List:
     delivered at the full static window shape — the trace carries no pads
     for them, so border spill is edge-replicated here, at the read stage.
 
+    The read stage is *total over virtual geometry*: a read whose region
+    spills past the source's real rows (virtual padded strips) is clamped to
+    the image and edge-replicated back out — the host-side twin of the SPMD
+    executor's padded-global + halo edge replication, so a virtual plan's
+    inputs carry the same pixel values on every engine.
+
     An empty ``windows`` means "no windowed reads" (plans built before the
     describe pass existed); a non-empty tuple must align with ``reads``.
     """
@@ -98,13 +118,42 @@ def read_plan_sources(reads, windows) -> List:
             f"windows/reads misaligned: {len(windows)} window specs for "
             f"{len(reads)} reads"
         )
+    def snap(lo: int, hi: int, n: int):
+        """Per axis: the in-image read range and the edge pads placing it
+        back inside half-open [lo, hi).  The range is the overlap with
+        [0, n) when one exists; on a fully-virtual axis it is the nearest
+        single edge unit and every output unit replicates it (one-sided pad
+        — the single source value makes the split immaterial)."""
+        a, b = max(lo, 0), min(hi, n)
+        if a < b:
+            return a, b, (a - lo, hi - b)
+        if hi <= 0:  # entirely above/left of the image: replicate unit 0
+            return 0, 1, ((hi - lo) - 1, 0)
+        return n - 1, n, (0, (hi - lo) - 1)  # entirely below/right
+
     wins = windows if windows else (None,) * len(reads)
-    return [
-        boundary_pad(s.generate(clamped), clamped, region)
-        if w is not None
-        else s.generate(clamped)
-        for (s, clamped, region), w in zip(reads, wins)
-    ]
+    out = []
+    for (s, clamped, region), w in zip(reads, wins):
+        full = s.output_info().full_region
+        have = clamped.clamp(full)
+        if not have.is_empty():
+            arr = boundary_pad(s.generate(have), have, clamped)
+        else:
+            # the region misses the image entirely on >= 1 axis (a strip
+            # fully past the border, e.g. more workers than rows): read the
+            # nearest edge unit on the virtual axis and replicate outward —
+            # pure edge extension, the exact values the SPMD padded global
+            # holds over its pad rows
+            r0, r1, rpad = snap(clamped.row0, clamped.row1, full.rows)
+            c0, c1, cpad = snap(clamped.col0, clamped.col1, full.cols)
+            arr = np.asarray(s.generate(ImageRegion((r0, c0), (r1 - r0, c1 - c0))))
+            arr = np.pad(
+                arr, [rpad, cpad] + [(0, 0)] * (arr.ndim - 2), mode="edge"
+            )
+        if w is not None:
+            arr = boundary_pad(arr, clamped, region)
+        out.append(arr)
+    return out
 
 
 @dataclasses.dataclass
@@ -115,11 +164,20 @@ class PlanDescription:
     ``reads``: list of (source, clamped_region, requested_region) in plan
     order; ``signature`` is the canonical plan key (shape/boundary/plan-key
     static data, per-node serials); ``origin_values`` are this region's
-    absolute coordinates for ``needs_origin`` nodes, threaded into the
-    compiled function as traced scalars.  ``windows[i]`` is the static
-    (rows, cols) window-spec shape when read *i* is a windowed read (the
-    request of a ``needs_origin`` node lowered to a fixed-shape bounding
-    window whose origin is traced), else None.
+    absolute coordinates for ``needs_origin`` nodes — and the absolute row
+    origins of mask-aware persistent filters — threaded into the compiled
+    function as traced scalars.  ``windows[i]`` is the static (rows, cols)
+    window-spec shape when read *i* is a windowed read (the request of a
+    ``needs_origin`` node lowered to a fixed-shape bounding window whose
+    origin is traced), else None.
+
+    Pad metadata: ``virtual`` marks a description produced by the virtually
+    row-padded describe walk (``describe_pull(..., virtual=True)`` — no row
+    clamping, so a strip spilling past the image shares the interior
+    signature) and ``pad_rows`` counts the trailing output rows that lie
+    beyond the real image (0 on real geometry).  Neither is part of the
+    signature — that is the point: a virtual strip's plan *is* the interior
+    plan, and the executor crops/masks the pad rows instead.
     """
 
     node: "ProcessObject"
@@ -129,6 +187,8 @@ class PlanDescription:
     origin_values: Tuple[int, ...]
     persistent_nodes: List["PersistentFilter"]
     windows: Tuple[Optional[Tuple[int, int]], ...] = ()
+    virtual: bool = False
+    pad_rows: int = 0
 
     def read_sources(self) -> List:
         return read_plan_sources(self.reads, self.windows)
@@ -285,3 +345,19 @@ def global_plan_cache() -> PlanCache:
         if _GLOBAL_CACHE is None:
             _GLOBAL_CACHE = PlanCache(max_entries=512)
         return _GLOBAL_CACHE
+
+
+def reset_global_plan_cache() -> PlanCache:
+    """Swap in a fresh process-wide registry and return the **old** one.
+
+    The old cache object (and its :class:`CacheStats`) stays fully usable:
+    executors that captured it — e.g. a ``StreamResult.cache_stats`` from an
+    earlier run — keep reading their own counters (evictions included), so a
+    reset never zeroes history out from under a caller.  Subsequent
+    :func:`global_plan_cache` calls see an empty registry with fresh
+    counters."""
+    global _GLOBAL_CACHE
+    with _GLOBAL_LOCK:
+        old = _GLOBAL_CACHE if _GLOBAL_CACHE is not None else PlanCache(max_entries=512)
+        _GLOBAL_CACHE = PlanCache(max_entries=512)
+        return old

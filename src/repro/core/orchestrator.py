@@ -24,7 +24,7 @@ import dataclasses
 import pathlib
 import tempfile
 import time
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import Callable, Dict, Optional, Sequence
 
 from repro.core.execplan import CacheStats, PlanCache, global_plan_cache
 from repro.core.pipeline import Pipeline

@@ -34,26 +34,35 @@ Two kinds of reads feed filters:
     ``lax.dynamic_slice`` of the halo-exchanged local shard.
 
 Anything else (data-dependent regions, non-affine request growth, drifting
-``needs_origin`` reads without a ``window_bound``) raises
-``NotStripParallelizable`` and should run through the streaming driver.
+``needs_origin`` reads without a ``window_bound``, per-strip plan keys)
+raises ``NotStripParallelizable`` and should run through the streaming
+driver.
 
-**Unified ExecutionPlan path** — ``build_strip_plan`` runs the cheap
-describe pass (``Pipeline.describe_pull``) for every worker strip, checks
-that all interior strips share one canonical plan signature, and fetches the
-strip body from the shared :class:`~repro.core.execplan.PlanCache` — the
-very same registry (and the very same lowered closure) the streaming engine
-uses.  A pipeline streamed first and then run SPMD on matching strip
-geometry is therefore a registry *hit*: no new describe→lower pass, no new
-closure tree.  Per-strip ``needs_origin`` coordinates (including window
-origins) are threaded as per-worker constant tables indexed by the mesh
-index; plan reads are static slices of the halo-exchanged local shard when
-their offsets are strip-invariant and ``lax.dynamic_slice`` windows
-otherwise.  Graphs that need per-device masks (uneven rows over persistent
-filters) fall back to the legacy hand-rolled closure — the only remaining
-non-registry path, since windowed reads retired the whole-shard
-coordinate-read closure.  The jitted SPMD program itself is registered in
-the same cache under its geometry key, so repeated executors on one
-pipeline reuse one program.
+**Unified ExecutionPlan path** — the *only* strip path.  ``build_strip_plan``
+runs the cheap describe pass (``Pipeline.describe_pull``) for every worker
+strip against the **virtual padded geometry** (rows padded up to ``n × H``,
+``H = ceil(rows / n)``; the describe walk never clamps rows), so every strip
+— the ragged last one of an uneven split and both border strips of an n=2
+halo split included — yields the *interior* plan signature.  All strips must
+share that one signature; the strip body is then fetched from the shared
+:class:`~repro.core.execplan.PlanCache` — the very same registry (and the
+very same lowered closure) the streaming engine uses.  A pipeline streamed
+first and then run SPMD on any strip geometry is therefore a registry *hit*:
+no new describe→lower pass, no new closure tree.  Per-strip ``needs_origin``
+coordinates (covariant, window *and* persistent-mask origins alike) are
+threaded as per-worker constant tables indexed by the mesh index; plan reads
+are static slices of the halo-exchanged local shard when their offsets are
+strip-invariant and ``lax.dynamic_slice`` windows otherwise.  Row spill past
+the real image — border halos and virtual pad rows — is materialized at the
+read stage (edge-padded global + halo edge replication), never in the trace.
+Masked-persistent accumulation is the only special case left, and it runs
+through the same registry body: mask-aware filters accumulate under an
+in-trace validity mask derived from their traced row origin, so pad rows
+never contaminate reduced state; the executor crops pad rows before the
+write stage, keeping outputs bit-identical to the streaming oracle.  The
+legacy hand-rolled strip closure is gone.  The jitted SPMD program itself is
+registered in the same cache under its geometry key, so repeated executors
+on one pipeline reuse one program.
 """
 from __future__ import annotations
 
@@ -74,10 +83,10 @@ except AttributeError:  # pragma: no cover
 
 from repro.core.execplan import PlanCache
 from repro.core.pipeline import Pipeline
+from repro.core.splitting import padded_strip_rows, virtual_strip_regions
 from repro.core.process_object import (
     ImageInfo,
     Mapper,
-    PersistentFilter,
     ProcessObject,
     Reduction,
     Source,
@@ -146,12 +155,16 @@ class StripPlan:
     source_strips: List[SourceStrip]
     #: fn(local_arrays, axis_idx) -> (out_strip, {pname: state})
     fn: Callable
-    #: True when the strip body is the shared canonical plan from the
-    #: ExecutionPlan registry (one trace with the equivalent streaming
-    #: stripes); False on the legacy hand-rolled closure fallback
-    unified: bool = False
-    #: canonical signature of the shared per-strip plan (unified path only)
+    #: always True since the virtual-padded-strip path retired the legacy
+    #: hand-rolled closure: every strip body IS the shared canonical plan
+    #: from the ExecutionPlan registry (kept as a field for introspection /
+    #: back-compat with callers that asserted on it)
+    unified: bool = True
+    #: canonical signature of the shared per-strip plan
     plan_signature: Optional[Tuple] = None
+    #: trailing virtual pad rows past the real image (cropped by the
+    #: executor before the write stage; masked out of persistent state)
+    pad_rows: int = 0
     #: registry key prefix for the jitted SPMD program (device ids appended
     #: by the executor)
     program_key: Tuple = ()
@@ -181,27 +194,10 @@ def _probe_edges(pipeline: Pipeline, mapper: Mapper, k: int, H: int, cols: int):
     return edges
 
 
-def _row_pads_free(signature: Tuple) -> bool:
-    """True when no record of a canonical signature bakes in row clamping —
-    the plan is *interior* (border behavior comes from halo edge
-    replication, not from the trace)."""
-    for rec in signature:
-        if rec[0] == "read":
-            pads = rec[4]
-        elif rec[0] == "node":
-            pads = rec[3]
-        else:
-            continue
-        if pads[0] or pads[1]:
-            return False
-    return True
-
-
-def _try_unified_strip_fn(
+def _unified_strip_fn(
     pipeline: Pipeline,
     mapper: Mapper,
     n_workers: int,
-    H: int,
     cols: int,
     out_info: ImageInfo,
     strip_by_source: Dict[int, SourceStrip],
@@ -209,43 +205,59 @@ def _try_unified_strip_fn(
 ):
     """Build the per-strip body from the shared ExecutionPlan registry.
 
-    Runs the describe pass for every worker strip (host-side, cheap), picks
-    the interior canonical signature, and — when all interior strips share it
-    — fetches/lower the canonical closure through ``plan_cache`` so the SPMD
-    program traces the *same* plan the streaming engine compiles for the
-    equivalent stripes.  Per-worker ``needs_origin`` coordinates (covariant
-    origins and windowed-read origins alike) become constant per-worker
-    tables gathered at the mesh index; plan reads whose offsets are
-    strip-invariant stay static slices of the halo-exchanged local shard,
-    drifting window reads lower to ``lax.dynamic_slice`` at table offsets.
+    Runs the *virtual* describe pass for every worker strip (host-side,
+    cheap, against the row-padded geometry — so ragged last strips and n=2
+    border strips describe like interior ones), requires every strip to
+    share one canonical signature, and fetches/lowers the canonical closure
+    through ``plan_cache`` so the SPMD program traces the *same* plan the
+    streaming engine compiles for the equivalent stripes.  Per-worker
+    ``needs_origin`` coordinates (covariant origins, windowed-read origins
+    and persistent-mask row origins alike) become constant per-worker tables
+    gathered at the mesh index; plan reads whose offsets are strip-invariant
+    stay static slices of the halo-exchanged local shard, drifting window
+    reads lower to ``lax.dynamic_slice`` at table offsets.
 
-    Returns ``(strip_fn, description)`` or ``None`` when the geometry cannot
-    share one interior trace (row clamping everywhere, per-strip plan keys,
-    mismatched walk shapes, reads outside the haloed window).
+    Returns ``(strip_fn, description)``; raises
+    :class:`NotStripParallelizable` when the geometry cannot share one
+    interior trace (per-strip plan keys, mismatched walk shapes, reads
+    outside the haloed window, unmaskable persistent state on a padded
+    split).
     """
     persistent = pipeline.persistent_nodes()
-    if persistent and H * n_workers != out_info.rows:
-        return None  # padded strips would need mask-aware accumulation
     infos = pipeline.update_information()
     descs = [
-        pipeline.describe_pull(mapper, ImageRegion((k * H, 0), (H, cols)))
-        for k in range(n_workers)
+        pipeline.describe_pull(mapper, strip, virtual=True)
+        for strip in virtual_strip_regions(out_info.rows, cols, n_workers)
     ]
     kp = n_workers // 2
     d0 = descs[kp]
-    if not _row_pads_free(d0.signature):
-        return None
-    eligible = [
-        k for k in range(n_workers) if descs[k].signature == d0.signature
+    if d0.pad_rows or any(d.pad_rows for d in descs):
+        unmaskable = [p.name for p in d0.persistent_nodes if not p.supports_mask]
+        if unmaskable:
+            raise NotStripParallelizable(
+                f"rows ({out_info.rows}) don't divide over {n_workers} "
+                f"workers and persistent filter(s) {unmaskable} are not "
+                "mask-aware (set supports_mask and handle `mask`); use the "
+                "streaming driver or a worker count that divides the rows"
+            )
+    mismatched = [
+        k for k in range(n_workers) if descs[k].signature != d0.signature
     ]
-    interior = range(1, n_workers - 1) if n_workers >= 3 else range(n_workers)
-    if not set(interior).issubset(eligible):
-        return None  # interior strips don't share one trace
+    if mismatched:
+        raise NotStripParallelizable(
+            f"worker strips {mismatched} do not share the canonical interior "
+            "plan signature (per-strip plan keys — e.g. a resampling phase "
+            "misaligned with the strip height — or non-uniform walk "
+            "geometry); use the streaming driver or change the strip count"
+        )
     nslots = len(d0.origin_values)
-    if any(len(descs[k].origin_values) != nslots for k in range(n_workers)):
-        return None  # walk shape differs → slot tables would misalign
-    if any(len(descs[k].reads) != len(d0.reads) for k in range(n_workers)):
-        return None
+    if any(len(descs[k].origin_values) != nslots for k in range(n_workers)) or any(
+        len(descs[k].reads) != len(d0.reads) for k in range(n_workers)
+    ):
+        raise NotStripParallelizable(
+            "per-strip describe walks disagree in shape; use the streaming "
+            "driver"
+        )
 
     # per-slot origin tables over the mesh index: a constant gather handles
     # every per-strip drift the describe pass produced (affine or not)
@@ -262,12 +274,15 @@ def _try_unified_strip_fn(
     read_specs = []
     for i, (src, clamped, req) in enumerate(d0.reads):
         ss = strip_by_source.get(id(src))
-        if ss is None:
-            return None
-        if any(descs[k].reads[i][0] is not src for k in range(n_workers)):
-            return None
-        if any(descs[k].reads[i][2].size != req.size for k in range(n_workers)):
-            return None
+        if ss is None or any(
+            descs[k].reads[i][0] is not src for k in range(n_workers)
+        ) or any(
+            descs[k].reads[i][2].size != req.size for k in range(n_workers)
+        ):
+            raise NotStripParallelizable(
+                f"{src.name}: per-strip reads disagree with the probe "
+                "geometry; use the streaming driver"
+            )
         local_rows = ss.pitch + ss.halo_top + ss.halo_bot
         src_cols = infos[id(src)].cols
         windowed = i < len(d0.windows) and d0.windows[i] is not None
@@ -281,16 +296,20 @@ def _try_unified_strip_fn(
             if wcols <= src_cols:
                 ncols, cpad = wcols, (0, 0)
                 if any(c < 0 or c + wcols > src_cols for c in cls):
-                    return None
+                    raise NotStripParallelizable(
+                        f"{src.name}: a strip's read window leaves the image "
+                        "columns; use the streaming driver"
+                    )
             else:
                 # window wider than the image: uniform right-edge pad
                 # (window_request anchors every strip's window at col 0)
                 ncols, cpad = src_cols, (0, wcols - src_cols)
                 if any(c != 0 for c in cls):
-                    return None
+                    raise NotStripParallelizable(
+                        f"{src.name}: over-wide read windows must anchor at "
+                        "column 0 on every strip; use the streaming driver"
+                    )
         else:
-            if clamped.rows != req.rows:  # row clamps — _row_pads_free guards
-                return None
             rows, ncols = clamped.rows, clamped.cols
             cpad = (0, 0)
             pl = clamped.col0 - req.col0  # col clamp baked in the trace
@@ -300,7 +319,11 @@ def _try_unified_strip_fn(
             ]
             cls = [descs[k].reads[i][2].col0 + pl for k in range(n_workers)]
         if any(o < 0 or o + rows > local_rows for o in offs):
-            return None
+            raise NotStripParallelizable(
+                f"{src.name}: a strip's read spills outside the haloed local "
+                f"shard ({local_rows} rows); use fewer workers or the "
+                "streaming driver"
+            )
         # static only when EVERY worker (border strips run this trace too,
         # via halo replication) agrees on the shard offset
         if all(offs[k] == offs[kp] and cls[k] == cls[kp]
@@ -308,7 +331,10 @@ def _try_unified_strip_fn(
             read_specs.append((id(src), False, offs[kp], cls[kp], rows, ncols, cpad))
         else:
             if any(c < 0 or c + ncols > src_cols for c in cls):
-                return None
+                raise NotStripParallelizable(
+                    f"{src.name}: drifting read columns leave the image; use "
+                    "the streaming driver"
+                )
             read_specs.append(
                 (id(src), True, tuple(offs), tuple(cls), rows, ncols, cpad)
             )
@@ -356,7 +382,7 @@ def build_strip_plan(
 ) -> StripPlan:
     infos = pipeline.update_information()
     out_info = infos[id(mapper)]
-    H = math.ceil(out_info.rows / n_workers)
+    H, pad_rows = padded_strip_rows(out_info.rows, n_workers)
     cols = out_info.cols
 
     # --- probe EVERY worker's strip (host-side, cheap) -----------------------
@@ -364,11 +390,8 @@ def build_strip_plan(
     if any(len(p) != len(probes[0]) for p in probes):
         raise NotStripParallelizable("graph shape varies per strip")
 
-    #: per edge occurrence (keyed by (id(node), worker-0 region)):
-    pitches: Dict[Tuple[int, ImageRegion], int] = {}
     #: per source: list of (pitch_or_None, [row ranges over all k])
     src_reads: Dict[int, List[Tuple[Optional[int], List[Tuple[int, int]]]]] = {}
-    has_window_reads = False
 
     for i, (parent0, node0, r0, win0) in enumerate(probes[0]):
         occs = [p[i][2] for p in probes]
@@ -383,7 +406,6 @@ def build_strip_plan(
         if win0:
             # window spec subtree: static shape by construction, origins may
             # drift freely (the unified path tables them per worker)
-            has_window_reads = True
             if is_src:
                 src_reads.setdefault(id(node0), []).append((None, row_ranges))
             continue
@@ -404,7 +426,6 @@ def build_strip_plan(
                 f"{hint}"
             )
         pitch = row_pitches.pop() if row_pitches else 0  # 0 only when n_workers==1
-        pitches[(id(node0), r0)] = pitch
         if is_src:
             if n_workers > 1 and pitch <= 0:
                 raise NotStripParallelizable(f"{node0.name}: non-positive pitch {pitch}")
@@ -443,125 +464,23 @@ def build_strip_plan(
     )
     cache = plan_cache if plan_cache is not None else PlanCache()
 
-    # --- preferred: the shared canonical plan from the ExecutionPlan layer ---
-    unified = _try_unified_strip_fn(
-        pipeline, mapper, n_workers, H, cols, out_info, strip_by_source,
-        cache,
+    # --- the shared canonical plan from the ExecutionPlan layer --------------
+    # (the only strip path: virtual padded strips make it total over ragged
+    # splits and n=2 halos, so there is no legacy closure to fall back to)
+    strip_fn, desc = _unified_strip_fn(
+        pipeline, mapper, n_workers, cols, out_info, strip_by_source, cache,
     )
-    if unified is not None:
-        strip_fn, desc = unified
-        return StripPlan(
-            n_workers=n_workers,
-            strip_rows=H,
-            out_info=out_info,
-            source_strips=source_strips,
-            fn=strip_fn,
-            unified=True,
-            plan_signature=desc.signature,
-            program_key=(
-                "spmd", axis_name, n_workers, H, geom, desc.signature,
-            ),
-        )
-    if has_window_reads:
-        # windowed reads only run through the registry strip body; the legacy
-        # closure below serves masked-persistent covariant graphs only
-        raise NotStripParallelizable(
-            "windowed coordinate reads require the unified ExecutionPlan "
-            "strip path, but the worker strips could not share one canonical "
-            "plan (uneven split, per-strip plan keys, or windows outside the "
-            "halo); use the streaming driver or change the strip geometry"
-        )
-
-    # --- fallback: hand-rolled local strip closure (worker-0 geometry) -------
-    persistent = pipeline.persistent_nodes()
-
-    def build(node: ProcessObject, region: ImageRegion, ctx):
-        """Returns (data, (traced_row0, static_col0)) — the array's absolute
-        origin.  ctx = dict(arrays={source id: local haloed array},
-        axis_idx=traced, pstates={name: state})."""
-        key = (id(node), region)
-        if key in ctx["memo"]:
-            return ctx["memo"][key]
-        own_info = infos[id(node)]
-        ups = pipeline.inputs_of(node)
-        kk = ctx["axis_idx"]  # traced worker index
-        if not ups:
-            ss = strip_by_source[id(node)]
-            local = ctx["arrays"][id(node)]
-            # local array covers absolute rows
-            # [k·pitch − halo_top, (k+1)·pitch + halo_bot)
-            off = region.row0 + ss.halo_top  # worker-0 geometry
-            assert off >= 0, (node.name, region, ss)
-            data = lax.slice_in_dim(local, off, off + region.rows, axis=0)
-            # columns: static clamp + edge pad (requests may spill sideways)
-            c0, c1 = max(0, region.col0), min(own_info.cols, region.col1)
-            data = data[:, c0:c1]
-            pl_, pr_ = c0 - region.col0, region.col1 - c1
-            if pl_ or pr_:
-                data = jnp.pad(
-                    data,
-                    [(0, 0), (pl_, pr_)] + [(0, 0)] * (data.ndim - 2),
-                    mode="edge",
-                )
-            origin = (region.row0 + kk * ss.pitch, region.col0)
-        else:
-            in_infos = [infos[id(u)] for u in ups]
-            reqs = node.requested_region(region, *in_infos)
-            node_origin_aware = getattr(node, "needs_origin", False)
-            child_results = [
-                build(u, r, ctx) for u, r in zip(ups, reqs)
-            ]
-            ins = [d for d, _ in child_results]
-            in_origins = [o for _, o in child_results]
-            pitch_node = pitches[(id(node), region)]
-            if isinstance(node, PersistentFilter):
-                st = ctx["pstates"][node.name]
-                padded = n_workers > 1 and pitch_node * n_workers != own_info.rows
-                if padded and not node.supports_mask:
-                    raise NotStripParallelizable(
-                        f"{node.name}: rows ({out_info.rows}) don't divide over "
-                        f"{n_workers} workers and the filter is not "
-                        "mask-aware (set supports_mask and handle `mask`)"
-                    )
-                if node.supports_mask:
-                    rows_abs = region.row0 + kk * pitch_node + jnp.arange(region.rows)
-                    mask = ((rows_abs >= 0) & (rows_abs < own_info.rows))[:, None, None]
-                    ctx["pstates"][node.name] = node.accumulate(
-                        st, region, *ins, mask=mask
-                    )
-                else:
-                    ctx["pstates"][node.name] = node.accumulate(st, region, *ins)
-            if node_origin_aware:
-                data = node.generate(
-                    region, *ins,
-                    origin=(region.row0 + kk * pitch_node, region.col0),
-                    input_origins=tuple(in_origins),
-                )
-            else:
-                data = node.generate(region, *ins)
-            origin = (region.row0 + kk * pitch_node, region.col0)
-        ctx["memo"][key] = (data, origin)
-        return data, origin
-
-    def strip_fn(local_arrays: Dict[int, jnp.ndarray], axis_idx):
-        ctx = {
-            "arrays": local_arrays,
-            "axis_idx": axis_idx,
-            "pstates": {p.name: p.reset() for p in persistent},
-            "memo": {},
-        }
-        out, _ = build(mapper, ImageRegion((0, 0), (H, cols)), ctx)
-        return out, ctx["pstates"]
-
     return StripPlan(
         n_workers=n_workers,
         strip_rows=H,
         out_info=out_info,
         source_strips=source_strips,
         fn=strip_fn,
-        unified=False,
+        unified=True,
+        plan_signature=desc.signature,
+        pad_rows=pad_rows,
         program_key=(
-            "spmd-legacy", axis_name, n_workers, H, mapper._serial, geom,
+            "spmd", axis_name, n_workers, H, geom, desc.signature,
         ),
     )
 

@@ -40,6 +40,21 @@ absolute origin is a traced scalar, so all regions of one size share a
 single trace.  Windowed reads carry no boundary pads in the trace — border
 spill is edge-replicated at the read stage — so border regions share the
 interior signature too.
+
+Virtual padded strips: ``describe_pull(..., virtual=True)`` runs the same
+walk against a *virtually row-padded* geometry — requests are never clamped
+(hence never padded) in the row direction, only columns clamp in-image.  A
+region that spills past the real image rows (the ragged last SPMD strip, or
+the border strips of an n=2 halo split) then describes exactly like an
+interior region and shares the interior plan signature; the spilled rows are
+materialized at the read stage instead (edge-replicated halo rows under
+SPMD, :func:`~repro.core.execplan.read_plan_sources`'s clamp+pad host-side).
+Mask-aware persistent filters (``supports_mask``) always thread their output
+region's absolute row origin through the plan as a traced scalar and
+accumulate under an in-trace validity mask (rows inside the real image), so
+the masked-persistent case runs through the very same registry body — with
+an all-true mask on real geometry and pad rows masked out on virtual
+geometry.
 """
 from __future__ import annotations
 
@@ -172,20 +187,29 @@ class Pipeline:
 
     # -- symbolic pull: describe (cheap) + lower (closure construction) --------
     def describe_pull(
-        self, node: ProcessObject, out_region: ImageRegion
+        self, node: ProcessObject, out_region: ImageRegion,
+        virtual: bool = False,
     ) -> PlanDescription:
         """The describe pass: reads + canonical signature + origin scalars
         for ``node`` over ``out_region``, with **no** closure construction.
 
         Runs the same recursion as :meth:`compile_pull` (so the signature is
         bit-identical) but skips building the O(graph) closure tree — on a
-        plan-registry hit this is the only per-region graph work."""
-        return self._plan_walk(node, out_region, lower=False)
+        plan-registry hit this is the only per-region graph work.
+
+        ``virtual=True`` describes against the virtually row-padded geometry
+        (no row clamping anywhere in the walk), so a region spilling past the
+        image rows yields the *interior* signature — the SPMD strip prober
+        uses this to keep ragged and n=2 strip splits on the registry path."""
+        return self._plan_walk(node, out_region, lower=False, virtual=virtual)
 
     def lower_pull(self, desc: PlanDescription) -> "PullPlan":
-        """The lower pass: build the jittable closure for a described plan.
+        """The lower pass: build the jittable closure for a described plan
+        (re-walked in the description's real/virtual geometry mode).
         The plan registry calls this on misses only."""
-        plan = self._plan_walk(desc.node, desc.out_region, lower=True)
+        plan = self._plan_walk(
+            desc.node, desc.out_region, lower=True, virtual=desc.virtual
+        )
         assert plan.signature == desc.signature, (
             "describe/lower signature drift",
             desc.node.name,
@@ -204,8 +228,27 @@ class Pipeline:
         compiled function serves every region with the same ``signature``."""
         return self._plan_walk(node, out_region, lower=True)
 
-    def _plan_walk(self, node: ProcessObject, out_region: ImageRegion, lower: bool):
+    def _plan_walk(
+        self,
+        node: ProcessObject,
+        out_region: ImageRegion,
+        lower: bool,
+        virtual: bool = False,
+    ):
         infos = self.update_information()
+
+        def clamp(region: ImageRegion, own_info: ImageInfo) -> ImageRegion:
+            if not virtual:
+                return region.clamp(own_info.full_region)
+            # virtual padded geometry: rows pass through unclamped (the read
+            # stage materializes spilled rows by edge replication), columns
+            # still clamp in-image so the column-pad statics match the real
+            # interior signature
+            c0 = max(region.col0, 0)
+            c1 = min(region.col1, own_info.cols)
+            if c1 < c0:
+                c1 = c0
+            return ImageRegion((region.row0, c0), (region.rows, c1 - c0))
         reads: List[Tuple[Source, ImageRegion, ImageRegion]] = []
         read_windows: List[Optional[Tuple[int, int]]] = []
         read_index: Dict[Tuple, int] = {}
@@ -242,7 +285,7 @@ class Pipeline:
                 return fn
             ordinal = len(built)
             own_info = infos[id(n)]
-            clamped = region.clamp(own_info.full_region)
+            clamped = clamp(region, own_info)
             # boundary-pad widths are baked into the trace → part of the key
             pads = (
                 clamped.row0 - region.row0,
@@ -313,6 +356,13 @@ class Pipeline:
                 if origin_aware
                 else None
             )
+            # mask-aware persistent filters always thread their absolute row
+            # origin as a traced scalar: the in-trace validity mask is all-true
+            # on real geometry and masks virtual pad rows under padded SPMD
+            # strips — one registry body serves both (slot registration must
+            # not depend on the walk mode, or real/virtual plans with equal
+            # signatures would disagree on the origin vector length)
+            mi = dyn(clamped.row0) if persist and n.supports_mask else None
             winb = wbounds if any(b is not None for b in wbounds) else None
             sig.append(
                 ("node", n._serial, clamped.size, pads, origin_aware, persist,
@@ -323,12 +373,23 @@ class Pipeline:
 
                 def run_node(arrays, origins, ctx, _n=n, _clamped=clamped,
                              _region=region, _fns=child_fns, _oi=oi, _ii=ii,
-                             _persist=persist):
+                             _persist=persist, _mi=mi,
+                             _rows_total=own_info.rows):
                     ins = [f(arrays, origins, ctx) for f in _fns]
                     if _persist:
-                        ctx["pstates"][_n.name] = _n.accumulate(
-                            ctx["pstates"][_n.name], _clamped, *ins
-                        )
+                        if _mi is not None:
+                            rows_abs = origins[_mi] + jnp.arange(_clamped.rows)
+                            mask = (
+                                (rows_abs >= 0) & (rows_abs < _rows_total)
+                            )[:, None, None]
+                            ctx["pstates"][_n.name] = _n.accumulate(
+                                ctx["pstates"][_n.name], _clamped, *ins,
+                                mask=mask,
+                            )
+                        else:
+                            ctx["pstates"][_n.name] = _n.accumulate(
+                                ctx["pstates"][_n.name], _clamped, *ins
+                            )
                     if _oi is not None:
                         out = _n.generate(
                             _clamped,
@@ -359,6 +420,12 @@ class Pipeline:
                 origin_values=static_origins,
                 persistent_nodes=persistent_nodes,
                 windows=tuple(read_windows),
+                virtual=virtual,
+                pad_rows=(
+                    max(0, out_region.row1 - infos[id(node)].rows)
+                    if virtual
+                    else 0
+                ),
             )
 
         def canonical_fn(arrays, pstates, origins):

@@ -14,7 +14,7 @@ from __future__ import annotations
 import collections
 import heapq
 import threading
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import Callable, List, Optional, Sequence
 
 from repro.core.region import ImageRegion
 

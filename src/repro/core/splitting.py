@@ -21,6 +21,35 @@ class Splitter:
         raise NotImplementedError
 
 
+def padded_strip_rows(rows: int, n_workers: int) -> tuple[int, int]:
+    """Uniform SPMD strip height + virtual row padding for ``rows`` output
+    rows over ``n_workers`` strips: ``(H, pad)`` with ``H = ceil(rows / n)``
+    and ``pad = n·H − rows`` trailing *virtual* rows past the image.
+
+    This is the geometry contract of the virtual-padded-strip SPMD path:
+    every worker gets an ``H``-row strip of the virtually padded image, the
+    padded global input is edge-replicated over the pad rows, and the
+    executor crops/masks the pad before the write stage."""
+    if rows <= 0 or n_workers <= 0:
+        raise ValueError("rows and n_workers must be positive")
+    H = math.ceil(rows / n_workers)
+    return H, n_workers * H - rows
+
+
+def virtual_strip_regions(
+    rows: int, cols: int, n_workers: int
+) -> List[ImageRegion]:
+    """The ``n_workers`` uniform virtual strips of a ``rows × cols`` output:
+    strip ``k`` is ``[k·H, (k+1)·H) × [0, cols)`` — the last strip(s) may
+    spill past ``rows`` (use :func:`padded_strip_rows` for the pad size).
+    Shared by the SPMD strip prober and the virtual describe pass so both
+    see identical per-worker geometry."""
+    H, _ = padded_strip_rows(rows, n_workers)
+    return [
+        ImageRegion((k * H, 0), (H, cols)) for k in range(n_workers)
+    ]
+
+
 class StripeSplitter(Splitter):
     """Horizontal strips — the paper's row-wise scheme (fast for the
     row-interleaved GeoTiff layout, §II.D [16])."""

@@ -25,7 +25,11 @@ Three layers make the hot loop run at hardware speed:
      lower pass (closure construction) happens on misses.
      Hit/miss/compile/lower/eviction counts are surfaced in
      ``StreamResult.cache_stats``; the same registry serves the SPMD
-     :class:`~repro.core.parallel.ParallelExecutor`.
+     :class:`~repro.core.parallel.ParallelExecutor`, whose virtual padded
+     strips land on the very same interior entries (the shared read stage,
+     :func:`~repro.core.execplan.read_plan_sources`, clamps + edge-pads any
+     virtual row spill host-side, mirroring the SPMD halo replication), so
+     streaming→SPMD stays a registry hit on ragged and n=2 splits too.
   3. **Async double buffering** — with ``prefetch=k``, source reads for the
      next ``k`` regions run on a thread pool while the device computes the
      current one, and ``mapper.consume`` is handed to a background writer

@@ -15,6 +15,15 @@ the SPMD strip plan the driver feeds the traced strip origin.  The affine
 part cancels origin shifts by construction (requested regions shift with the
 same affine pitch), so only the bounded displacement consumes traced
 coordinates.
+
+Virtual padded strips cost the warp nothing extra: :meth:`window_bound`
+depends only on the output *size*, so the ragged last strip of an uneven
+SPMD split — described against the row-padded virtual geometry with the
+uniform strip height — gets the same static window as every interior strip,
+and :func:`bicubic_sample`'s edge-clamped taps reproduce the streaming
+oracle's border replication over any rows the window hangs past the image
+(the padded global shard carries edge-replicated values there), keeping
+outputs bit-identical across ragged decompositions too.
 """
 from __future__ import annotations
 

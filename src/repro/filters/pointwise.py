@@ -4,7 +4,7 @@ Zero-halo, region-independent by construction.
 """
 from __future__ import annotations
 
-from typing import Callable, Optional, Sequence
+from typing import Callable
 
 import jax.numpy as jnp
 import numpy as np

@@ -29,7 +29,6 @@ from jax.experimental import pallas as pl
 from repro.kernels.util import (
     extract_patches,
     interpret_default,
-    pad_to_multiple,
     stitch_patches,
 )
 

@@ -2,7 +2,7 @@
 (or force with ``use_pallas=True`` → interpret mode on CPU)."""
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -13,7 +13,6 @@ from repro.kernels import meanshift as _ms
 from repro.kernels import pansharpen as _ps
 from repro.kernels import ssd_scan as _ssd
 from repro.kernels import ref as _ref
-from repro.kernels.util import interpret_default
 
 
 def _use_pallas(flag: Optional[bool]) -> bool:

@@ -11,7 +11,6 @@ the splitter-level planning reappears one level down the memory hierarchy.
 """
 from __future__ import annotations
 
-import math
 from typing import Tuple
 
 import jax

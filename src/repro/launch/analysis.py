@@ -15,9 +15,7 @@ replica-group span when available).
 from __future__ import annotations
 
 import re
-from typing import Dict, Optional, Tuple
-
-import numpy as np
+from typing import Dict
 
 _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,

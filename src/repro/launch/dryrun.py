@@ -29,7 +29,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import ARCH_IDS, SHAPES, cell_is_supported, get_config
-from repro.launch.analysis import analyze_compiled, parse_collective_bytes
+from repro.launch.analysis import analyze_compiled
 from repro.launch.mesh import HW, make_production_mesh
 from repro.models import lm
 from repro.models.inputs import (

@@ -12,7 +12,7 @@ import argparse
 import dataclasses
 import json
 
-from repro.configs import SHAPES, get_config
+from repro.configs import get_config
 from repro.launch import dryrun as DR
 from repro.launch.analysis import analyze_compiled, roofline_terms
 from repro.launch.mesh import HW

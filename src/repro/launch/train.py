@@ -12,9 +12,7 @@ devices.
 from __future__ import annotations
 
 import argparse
-import dataclasses
 
-import jax
 
 from repro.configs import get_config, reduced
 from repro.data import Prefetcher, SyntheticTokens

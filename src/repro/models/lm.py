@@ -14,8 +14,6 @@ Entry points:
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
 import math
 from typing import Any, Dict, Optional, Tuple
 

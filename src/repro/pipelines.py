@@ -18,7 +18,6 @@ import numpy as np
 
 from repro.core import Mapper, Pipeline, Source
 from repro.filters import (
-    BandStatistics,
     Convert,
     HaralickTextures,
     MeanShift,
@@ -29,7 +28,7 @@ from repro.filters import (
     SensorModel,
     train_forest,
 )
-from repro.raster import MemoryMapper, SyntheticScene, make_spot6_pair
+from repro.raster import MemoryMapper
 
 
 def _mapper(factory: Optional[Callable[[], Mapper]]) -> Mapper:

@@ -21,7 +21,7 @@ from typing import List, Optional, Tuple
 
 import numpy as np
 
-from repro.core.process_object import GeoTransform, ImageInfo, Mapper
+from repro.core.process_object import GeoTransform, ImageInfo
 from repro.core.region import ImageRegion
 
 MAGIC = b"RTIF0001"

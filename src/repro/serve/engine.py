@@ -7,7 +7,7 @@ the host-side loop mirrors the streaming driver's role on the raster side).
 """
 from __future__ import annotations
 
-from typing import Callable, Dict, Optional, Tuple
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp

@@ -8,8 +8,7 @@ reduce-scatter with the next microbatch's compute.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

@@ -23,10 +23,45 @@ def _run(code=None, argv=(), timeout=600):
     )
 
 
-def test_unknown_section_exits_nonzero():
+def test_unknown_section_exits_nonzero_and_lists_valid_names():
     proc = _run(argv=["--only", "doesnotexist", "--quick"])
     assert proc.returncode == 2, (proc.stdout, proc.stderr)
     assert "unknown benchmark section" in proc.stderr
+    # the error must teach the fix: every valid section name is listed
+    assert "valid sections" in proc.stderr
+    for name in ("io", "streaming", "pipelines", "balancing", "kernels",
+                 "roofline"):
+        assert name in proc.stderr, (name, proc.stderr)
+
+
+def test_unknown_section_suggests_close_match():
+    proc = _run(argv=["--only", "streming", "--quick"])  # typo'd 'streaming'
+    assert proc.returncode == 2, (proc.stdout, proc.stderr)
+    assert "did you mean 'streaming'" in proc.stderr, proc.stderr
+
+
+def test_snapshot_writes_headline_metrics(tmp_path):
+    """--snapshot emits the JSON perf-trajectory point: every CSV row keyed
+    by NAME (section order must not matter) plus the headline plan-layer
+    metrics when their rows ran."""
+    import json
+
+    snap_path = tmp_path / "BENCH_test.json"
+    # sections deliberately reordered vs the SECTIONS declaration
+    proc = _run(argv=["--only", "balancing", "--snapshot", str(snap_path), "--quick"])
+    assert proc.returncode == 0, (proc.stdout[-2000:], proc.stderr[-2000:])
+    snap = json.loads(snap_path.read_text())
+    assert snap["sections"] == ["balancing"]
+    assert "balance_static" in snap["rows"]
+    csv_rows = [
+        line.split(",")[0]
+        for line in proc.stdout.splitlines()[1:]
+        if line and not line.startswith("#")
+    ]
+    assert set(csv_rows) - {"name"} <= set(snap["rows"])
+    # balancing alone carries no plan-layer rows -> no headline metrics, but
+    # the key space is stable for trajectory tooling
+    assert isinstance(snap["metrics"], dict)
 
 
 def test_raising_bench_exits_nonzero():

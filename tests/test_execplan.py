@@ -11,10 +11,10 @@ devices vs the eager oracle) lives in tests/test_cross_executor_diff.py.
 import threading
 
 import numpy as np
-import pytest
 
 from repro import pipelines as PP
 from repro.core import (
+    ImageRegion,
     Pipeline,
     PlanCache,
     StreamingExecutor,
@@ -89,6 +89,64 @@ def test_streaming_executor_lowers_once_per_signature():
 def test_global_plan_cache_is_process_wide():
     assert global_plan_cache() is global_plan_cache()
     assert isinstance(global_plan_cache(), PlanCache)
+
+
+def test_global_plan_cache_reset_preserves_old_counters():
+    """reset_global_plan_cache swaps in a fresh registry but must never zero
+    history out from under callers that captured the old one: a StreamResult
+    holding the pre-reset ``cache_stats`` keeps its eviction/compile counters
+    (the perf-trajectory CI snapshot reads them after the run)."""
+    from repro.core.execplan import reset_global_plan_cache
+
+    baseline = reset_global_plan_cache()  # isolate from other tests
+    try:
+        cache = global_plan_cache()
+        assert cache is not baseline and len(cache) == 0
+        # drive real evictions through a tiny bounded registry shim: fill the
+        # GLOBAL cache via an executor, then overflow a bounded one sharing
+        # the same stats object semantics
+        p, m = PP.p6_conversion(SyntheticScene(24, 16, bands=2, dtype=np.float32))
+        res = StreamingExecutor(
+            p, m, StripeSplitter(n_splits=4), plan_cache=cache, prefetch=0
+        ).run()
+        assert res.cache_stats is cache.stats
+        for i in range(600):  # overflow the 512-entry LRU bound
+            cache.get_or_build(("filler", i), lambda: object())
+        assert cache.stats.evictions > 0
+        evictions = cache.stats.evictions
+        lowers = cache.stats.lowers
+        old = reset_global_plan_cache()
+        assert old is cache
+        # the captured stats object survives the reset untouched
+        assert res.cache_stats is old.stats
+        assert old.stats.evictions == evictions
+        assert old.stats.lowers == lowers
+        fresh = global_plan_cache()
+        assert fresh is not old
+        assert len(fresh) == 0 and fresh.stats.evictions == 0
+    finally:
+        reset_global_plan_cache()
+
+
+def test_read_stage_total_over_fully_virtual_regions():
+    """The read stage must materialize ANY virtual describe host-side — even
+    a strip lying entirely past the image (more workers than rows): it snaps
+    to the nearest edge unit and replicates outward, the same values the
+    SPMD executor's edge-padded global carries over its pad rows."""
+    src = SyntheticScene(3, 8, bands=2, dtype=np.float32)
+    p, m = PP.p6_conversion(src)
+    # 3 rows over 4 workers -> H = 1: worker 3's strip [3, 4) is fully virtual
+    desc = p.describe_pull(m, ImageRegion((3, 0), (1, 8)), virtual=True)
+    assert desc.pad_rows == 1
+    (arr,) = desc.read_sources()
+    bottom = np.asarray(src.generate(ImageRegion((2, 0), (1, 8))))
+    np.testing.assert_array_equal(np.asarray(arr), bottom)
+    # mixed axis: rows partially in-image, bottom spill edge-replicates
+    desc2 = p.describe_pull(m, ImageRegion((1, 0), (4, 8)), virtual=True)
+    (arr2,) = desc2.read_sources()
+    whole = np.asarray(src.generate(ImageRegion((0, 0), (3, 8))))
+    expect = np.concatenate([whole[1:], whole[2:], whole[2:]], axis=0)
+    np.testing.assert_array_equal(np.asarray(arr2), expect)
 
 
 def test_serial_signatures_distinct_across_pipelines():

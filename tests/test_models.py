@@ -5,7 +5,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import ARCH_IDS, SHAPES, cell_is_supported, get_config, reduced
+from repro.configs import ARCH_IDS, get_config, reduced
 from repro.models import lm
 from repro.models.inputs import synth_train_batch
 

@@ -5,7 +5,6 @@ import pathlib
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.optim import (
     adamw_init,

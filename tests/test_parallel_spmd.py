@@ -1,7 +1,6 @@
 """shard_map cluster execution on 8 virtual devices (subprocess-isolated so
 the main test process keeps 1 device): parallel == streamed oracle for the
 paper's pipelines, halo exchange + persistent collectives included."""
-import pytest
 
 
 CODE_CORE = r"""
@@ -34,8 +33,12 @@ def build():
 p, m = build()
 whole = np.asarray(p.pull(m, p.info(m).full_region))
 p2, m2 = build()
-res = ParallelExecutor(p2, m2).run()
+pe = ParallelExecutor(p2, m2)
+res = pe.run()
 assert res.regions_processed == 8
+# 100 rows over 8 workers: 13-row VIRTUAL padded strips (4 pad rows) on the
+# unified registry path, persistent state masked in-trace — no legacy closure
+assert pe.plan.unified and (pe.plan.strip_rows, pe.plan.pad_rows) == (13, 4)
 np.testing.assert_allclose(m2.result, whole, rtol=1e-5, atol=1e-4)
 stats = res.persistent_results["BandStatistics"]
 np.testing.assert_allclose(np.asarray(stats["mean"]),

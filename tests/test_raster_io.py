@@ -166,6 +166,41 @@ def test_strip_writer_flushes_on_gap_and_cap(tmp_path):
 
 
 @needs_pwrite
+def test_strip_writer_coalescing_disabled_writes_through(tmp_path):
+    """``coalesce_bytes=0``: every strip hits the disk synchronously (no
+    pending run, so data is visible BEFORE flush/close), out-of-order and
+    mutated-buffer writes are safe (the zero-buffering path never holds a
+    view of the caller's array), and the final image is exact — including
+    non-full-width tile regions, which take the row-segment path."""
+    path = str(tmp_path / "nc.rtif")
+    info = ImageInfo(16, 6, 2, np.float32)
+    data = np.random.default_rng(7).normal(size=(16, 6, 2)).astype(np.float32)
+    strips = _strips(info, data, 4)
+    w = RecordingStripWriter(path, info, coalesce_bytes=0)
+    try:
+        region0, block0 = strips[0]
+        buf = np.array(block0)
+        w.write(region0, buf)
+        buf[:] = -1.0  # caller reuses its buffer: already-written data stays
+        # visible immediately — the disabled path buffers nothing
+        np.testing.assert_array_equal(rio.read_region(path, region0), block0)
+        for region, block in reversed(strips[1:]):  # out-of-order is fine
+            w.write(region, block)
+        np.testing.assert_array_equal(rio.read_region(path), data)
+        assert len(w.calls) == len(strips)  # one syscall per strip, no runs
+        # a tile write (not full-width) goes through row segments
+        tile = ImageRegion((2, 2), (3, 3))
+        patch = np.full((3, 3, 2), 9.0, np.float32)
+        w.write(tile, patch)
+        np.testing.assert_array_equal(rio.read_region(path, tile), patch)
+        assert len(w.calls) == len(strips) + tile.rows
+        w.flush()  # flush on an empty run is a no-op, not an error
+        assert len(w.calls) == len(strips) + tile.rows
+    finally:
+        w.close()
+
+
+@needs_pwrite
 def test_strip_writer_flush_makes_data_visible(tmp_path):
     path = str(tmp_path / "f.rtif")
     info = ImageInfo(8, 4, 1, np.float32)

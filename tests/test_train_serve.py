@@ -3,7 +3,6 @@ batched generation, data pipeline determinism."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import get_config, reduced
 from repro.data import Prefetcher, SyntheticTokens

@@ -126,25 +126,46 @@ def test_windowed_plan_contains_exact_request():
             ), (region, exact, window)
 
 
-def test_uneven_rows_spmd_raises_with_streaming_hint():
-    """Deliberate trade-off of retiring the whole-shard coordinate-read
-    closure: a warp whose rows don't divide over the workers cannot share
-    the interior window trace (the clamped last strip has its own bound)
-    and must say so loudly, pointing at the streaming driver — never fall
-    back to a silently per-executor-compiled path."""
-    from repro.core import NotStripParallelizable
+def test_uneven_rows_take_the_virtual_padded_strip_path():
+    """A warp whose rows don't divide over the workers used to raise
+    NotStripParallelizable (the clamped last strip had its own window
+    bound); virtual padded strips describe the ragged last strip against
+    the row-padded geometry, so every strip shares the interior signature
+    and the plan stays on the unified registry path."""
     from repro.core.parallel import build_strip_plan
+    from repro.core.splitting import padded_strip_rows, virtual_strip_regions
 
-    p, m = _p1(rows=97)  # 97 rows over 4 workers → padded last strip
-    with pytest.raises(NotStripParallelizable, match="streaming driver"):
-        build_strip_plan(p, m, 4)
-    # the same raster streams fine on any split
-    StreamingExecutor(p, m, StripeSplitter(n_splits=4), prefetch=0).run()
-    oracle = np.asarray(p.pull(m, p.info(m).full_region))
-    np.testing.assert_allclose(
-        np.asarray(m.result).astype(np.float64), oracle.astype(np.float64),
-        rtol=1e-4, atol=1e-3,
-    )
+    p, m = _p1(rows=97)  # 97 rows over 4 workers → 25-row strips + 3 pad rows
+    plan = build_strip_plan(p, m, 4)
+    assert plan.unified
+    assert (plan.strip_rows, plan.pad_rows) == (25, 3)
+    assert padded_strip_rows(97, 4) == (25, 3)
+    # all four VIRTUAL strip describes share ONE interior signature — the
+    # ragged last strip included (its pad rows are read-stage material)
+    descs = [
+        p.describe_pull(m, r, virtual=True)
+        for r in virtual_strip_regions(97, 64, 4)
+    ]
+    assert len({d.signature for d in descs}) == 1
+    assert plan.plan_signature == descs[0].signature
+    assert descs[-1].pad_rows == 3 and descs[0].pad_rows == 0
+    # whereas the REAL describe of the clamped last strip stands apart
+    real_last = p.describe_pull(m, ImageRegion((75, 0), (22, 64)))
+    assert real_last.signature != descs[0].signature
+
+
+def test_virtual_describe_matches_real_on_interior_regions():
+    """On geometry that never touches a border, virtual and real describes
+    are indistinguishable — same signature, same reads, same origins — so
+    streaming (real) and SPMD (virtual) land on one registry entry."""
+    p, m = _p1()
+    region = ImageRegion((24, 0), (12, 64))
+    real = p.describe_pull(m, region)
+    virt = p.describe_pull(m, region, virtual=True)
+    assert real.signature == virt.signature
+    assert real.origin_values == virt.origin_values
+    assert [r[1:] for r in real.reads] == [r[1:] for r in virt.reads]
+    assert virt.pad_rows == 0 and not real.virtual and virt.virtual
 
 
 def test_cross_decomposition_bit_identity():
