@@ -1,0 +1,157 @@
+"""Task-parallel vs data-parallel stage orchestration (ROADMAP item 1).
+
+Reproduces the comparison the PAPERS.md workflow-design studies
+(Paraskevakos, arXiv:1905.09766; Al-Saadi, arXiv:2010.14756) found decisive
+for satellite-image workloads: a multi-stage job run **barrier-sequential**
+(each stage fully materializes before the next starts — wall time is the
+*sum* of stage times) vs **region-granularity pipelined** (all stages run
+concurrently, consumers pull a region the moment its producer commits it —
+wall time approaches the *slowest* stage plus a pipeline-fill ramp).
+
+The measured chain is a 3-stage DAG with a fixed, host-side per-region cost
+(`use_jit=False` + a sleeping identity filter), so the comparison is
+deterministic on any CI runner: with S stages of T seconds each, barrier
+wall is ~S*T while pipelined wall is ~T + (S-1)*T/n_regions.
+
+Rows (derived column):
+  orch_chain_barrier        wall time of the barrier oracle; derived = number of stages
+  orch_chain_pipelined      pipelined wall time; derived = pipelined/barrier
+                            ratio — the acceptance gate asserts < 0.75
+  orch_chain_max_in_flight  peak strips in flight on any edge (us column);
+                            derived = queue_capacity — the gate asserts
+                            in-flight <= capacity (bounded intermediates)
+  orch_chain_real_*         (full mode only) the real pansharpen → texture →
+                            classify chain from `pipelines.chain_stages` on
+                            the jitted pool path; compile warm-up differs
+                            per mode (fresh node serials → fresh plans), so
+                            this row is reported, not gated
+
+A violated gate raises, which makes `benchmarks/run.py` — and the CI bench
+smoke job — exit non-zero.
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+
+from repro.core import Orchestrator, Pipeline, Stage, StripeSplitter
+from repro.core.process_object import Filter
+from repro.raster import ParallelRasterWriter, RasterReader, SyntheticScene
+
+ROWS, COLS = 48, 32
+
+
+class _SleepIdentity(Filter):
+    """Identity with a fixed host-side cost per region (eager stages only)."""
+
+    def __init__(self, seconds: float, name=None):
+        super().__init__(name)
+        self.seconds = seconds
+
+    def output_info(self, info):
+        return info
+
+    def generate(self, out_region, x):
+        time.sleep(self.seconds)
+        return x
+
+
+def _sleep_chain(per_region: float, n_splits: int, n_stages: int = 3):
+    """n_stages-deep identity chain, every region costing ``per_region``."""
+
+    def make_build(inputs):
+        def build(input_paths, out_path):
+            p = Pipeline()
+            if inputs:
+                x = p.add(RasterReader(input_paths[inputs[0]]))
+            else:
+                x = p.add(
+                    SyntheticScene(ROWS, COLS, bands=2, dtype=np.float32)
+                )
+            x = p.add(_SleepIdentity(per_region), [x])
+            m = p.add(ParallelRasterWriter(out_path), [x])
+            return p, m
+
+        return build
+
+    stages = []
+    for i in range(n_stages):
+        inputs = (f"s{i - 1}",) if i else ()
+        stages.append(
+            Stage(f"s{i}", make_build(inputs), inputs=inputs,
+                  splitter=StripeSplitter(n_splits=n_splits), use_jit=False)
+        )
+    return stages
+
+
+def _wall(stages, **orch_kw) -> tuple:
+    with Orchestrator(stages, **orch_kw) as orch:
+        t0 = time.perf_counter()
+        orch.run()
+        return time.perf_counter() - t0, dict(orch.edge_stats)
+
+
+def run(quick: bool = False) -> List:
+    out = []
+    n_stages, capacity = 3, 2
+    per_region = 0.02 if quick else 0.05
+    n_splits = 6 if quick else 8
+
+    # untimed warm-up with the *same strip geometry* so the first timed run
+    # doesn't absorb one-time per-shape eager-dispatch compilation (the
+    # barrier run goes first and would otherwise look arbitrarily worse)
+    _wall(_sleep_chain(0.0, n_splits, n_stages))
+
+    t_barrier, _ = _wall(_sleep_chain(per_region, n_splits, n_stages))
+    t_pipe, stats = _wall(
+        _sleep_chain(per_region, n_splits, n_stages),
+        pipelined=True, queue_capacity=capacity,
+    )
+    ratio = t_pipe / t_barrier
+    max_in_flight = max(s.max_in_flight for s in stats.values())
+    overdrafts = sum(s.overdrafts for s in stats.values())
+
+    out.append(("orch_chain_barrier", t_barrier * 1e6, float(n_stages)))
+    out.append(("orch_chain_pipelined", t_pipe * 1e6, ratio))
+    out.append(("orch_chain_max_in_flight", float(max_in_flight),
+                float(capacity)))
+
+    # acceptance gates (ISSUE 6): pipelining beats the barrier sum by >=25%
+    # while never holding more than queue_capacity strips per edge in flight
+    if ratio >= 0.75:
+        raise AssertionError(
+            f"pipelined/barrier ratio {ratio:.3f} >= 0.75 "
+            f"(barrier {t_barrier:.3f}s, pipelined {t_pipe:.3f}s)"
+        )
+    if max_in_flight > capacity:
+        raise AssertionError(
+            f"max_in_flight {max_in_flight} exceeded queue_capacity "
+            f"{capacity} (stats: {stats})"
+        )
+    if overdrafts:
+        raise AssertionError(
+            f"zero-halo in-order chain must never overdraft; got {overdrafts}"
+        )
+
+    if not quick:
+        # the real chain (jitted pool stages); fresh node serials mean each
+        # mode pays its own compile warm-up, so report without a gate
+        from repro import pipelines as PP
+
+        t_real_b, _ = _wall(PP.chain_stages(rows_xs=24, cols_xs=16,
+                                            n_splits=6))
+        t_real_p, _ = _wall(
+            PP.chain_stages(rows_xs=24, cols_xs=16, n_splits=6),
+            pipelined=True, queue_capacity=capacity,
+        )
+        out.append(("orch_chain_real_barrier", t_real_b * 1e6, float(n_stages)))
+        out.append(("orch_chain_real_pipelined", t_real_p * 1e6,
+                    t_real_p / t_real_b))
+    return out
+
+
+if __name__ == "__main__":
+    for name, us, derived in run():
+        print(f"{name},{us:.1f},{derived:.4f}")

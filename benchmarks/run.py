@@ -5,7 +5,8 @@
 
 Prints ``name,us_per_call,derived`` CSV rows (derived: speedup for I/O,
 partition efficiency for pipelines, makespan ratio for balancing,
-Mpixel/s-Mtoken/s for kernels, roofline fraction for the dry-run cells).
+pipelined/barrier wall ratio for the orchestrator, Mpixel/s-Mtoken/s for
+kernels, roofline fraction for the dry-run cells).
 Section order follows ``--only``, so consumers must key on row *names*, not
 on row positions.
 
@@ -40,6 +41,10 @@ SECTIONS = {
     ),
     "pipelines": ("benchmarks.bench_pipelines", lambda mod, args: mod.run()),
     "balancing": ("benchmarks.bench_balancing", lambda mod, args: mod.run()),
+    "orchestrator": (
+        "benchmarks.bench_orchestrator",
+        lambda mod, args: mod.run(quick=args.quick),
+    ),
     "kernels": ("benchmarks.bench_kernels", lambda mod, args: mod.run()),
     "roofline": ("benchmarks.bench_roofline", lambda mod, args: mod.run()),
 }
@@ -51,6 +56,8 @@ _SNAPSHOT_METRICS = {
     "streaming_speedup_vs_rejit": ("streaming_P2_engine_cached", "derived"),
     "streaming_async_speedup_vs_rejit": ("streaming_P2_engine_async", "derived"),
     "streaming_compile_count": ("streaming_P2_compiles", "us_per_call"),
+    "orchestrator_pipelined_over_barrier": ("orch_chain_pipelined", "derived"),
+    "orchestrator_max_in_flight": ("orch_chain_max_in_flight", "us_per_call"),
 }
 
 

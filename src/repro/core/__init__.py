@@ -23,6 +23,7 @@ from repro.core.process_object import (
 )
 from repro.core.pipeline import Pipeline, PullPlan
 from repro.core.splitting import (
+    RowCoverage,
     Splitter,
     StripeSplitter,
     TileSplitter,
@@ -34,8 +35,17 @@ from repro.core.scheduling import (
     cost_weighted_static_schedule,
     lpt_schedule,
     work_stealing_schedule,
+    FifoQueue,
     WorkStealingQueue,
     makespan,
+)
+from repro.core.dag import (
+    EdgeFanout,
+    EdgeQueue,
+    EdgeStats,
+    PipelineCancelled,
+    RegionGate,
+    UpstreamFailed,
 )
 from repro.core.streaming import (
     StreamingExecutor,
@@ -65,6 +75,7 @@ __all__ = [
     "boundary_pad",
     "Pipeline",
     "PullPlan",
+    "RowCoverage",
     "Splitter",
     "StripeSplitter",
     "TileSplitter",
@@ -74,8 +85,15 @@ __all__ = [
     "cost_weighted_static_schedule",
     "lpt_schedule",
     "work_stealing_schedule",
+    "FifoQueue",
     "WorkStealingQueue",
     "makespan",
+    "EdgeFanout",
+    "EdgeQueue",
+    "EdgeStats",
+    "PipelineCancelled",
+    "RegionGate",
+    "UpstreamFailed",
     "CacheStats",
     "PlanCache",
     "PlanDescription",

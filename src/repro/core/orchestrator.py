@@ -1,31 +1,88 @@
-"""Orchestration of multiple connected pipelines (the paper's §IV.C second
-future-work item).
+"""Orchestration of multiple connected pipelines (paper §IV.C) — barrier and
+region-granularity pipelined execution of a stage DAG.
 
-The paper recommends splitting heterogeneous pipelines "in multiple
-homogeneous parts with uniform scalability and to run them sequentially",
-and asks for "the orchestration of multiple connected pipelines execution".
 ``Orchestrator`` runs a DAG of pipeline *stages*: each stage is a pipeline
 terminated by a raster writer; downstream stages read the upstream products
-(materialized as RTIF files — the cluster-wide exchange medium, exactly the
-role GeoTiff plays in the paper's production setting).  Each stage declares
-its own worker count / executor kind, so a poorly-scaling stage (paper:
-heavy-I/O or non-parallelizable filters) can run at a different width than
-a compute-bound one.
+(materialized as RTIF files — the cluster-wide exchange medium, the role
+GeoTiff plays in the paper's production setting).  Each stage declares its
+own worker count / executor kind, so a poorly-scaling stage can run at a
+different width than a compute-bound one, and all stages consult one shared
+:class:`~repro.core.execplan.PlanCache` (the process-wide registry by
+default) so a DAG mixing thread-pool streaming stages (``executor="pool"``)
+and shard_map SPMD stages (``executor="spmd"``) shares compiled plans.
 
-All stages consult one shared :class:`~repro.core.execplan.PlanCache` (the
-process-wide registry by default), so a DAG mixing thread-pool streaming
-stages (``executor="pool"``) and shard_map SPMD stages (``executor="spmd"``)
-shares compiled plans: a stage graph already traced by one executor kind is
-a registry hit for the other on matching strip geometry.
+Two execution modes:
+
+**Barrier mode** (``pipelined=False``, the differential oracle): stages run
+strictly sequentially — a stage starts only after every producer has fully
+materialized its output.  A multi-stage job pays the *sum* of stage wall
+times and holds whole intermediate images on disk between stages.
+
+**Pipelined mode** (``pipelined=True``): all ready stages run concurrently
+and connected stages stream into each other at **region granularity** via
+the edge-queue commit protocol (:mod:`repro.core.dag`):
+
+  * every producer→consumer pair gets a bounded :class:`~repro.core.dag.
+    EdgeQueue`; the producer's :class:`~repro.raster.io.StripWriter` fires a
+    commit notification for rows whose bytes are actually on disk (post
+    ``pwrite``/flush — a strip buffered in a coalescing run is *not* yet
+    committed, and one flushed run commits as a single row range);
+  * consumer workers gate **per region**: the describe pass records the
+    exact input rows a region reads (halos and windowed reads included) and
+    the :class:`~repro.core.dag.RegionGate` blocks until those rows are
+    committed — so a consumer starts pulling the moment its first input
+    strip lands, not when the producer finishes;
+  * at most ``queue_capacity`` committed-but-unconsumed strips stay in
+    flight per edge (backpressure on the producer, armed from edge creation
+    and fed in the consumers' row order — producer stages run FIFO); a
+    consumer demanding rows *beyond every offered strip* (halo past the
+    frontier at capacity 1, a whole-image consumer region) overrides the
+    bound so the DAG can never cycle-wait, counted in
+    ``EdgeStats.overdrafts``;
+  * a failed stage cancels its consumers **with the original exception**
+    (:class:`~repro.core.dag.UpstreamFailed`) and aborts every other stage
+    (:class:`~repro.core.dag.PipelineCancelled`) instead of hanging them;
+    :meth:`Orchestrator.cancel` does the same for a user shutdown.
+
+The end state the ROADMAP asks for: a pansharpen → texture → classify chain
+holds at most a few strips of intermediate in flight per edge and its wall
+time approaches the *slowest* stage, not the sum (see
+``benchmarks/bench_orchestrator.py``, which reproduces the task-parallel vs
+data-parallel comparison of the PAPERS.md workflow studies).
+
+Pipelined stage contracts: stage ``build`` callables must be geometry-only
+(they run as soon as upstream files have headers, *before* upstream pixels
+exist — pixel-dependent setup such as classifier training must happen
+before orchestration or inside filters); producer stages must terminate in
+a commit-capable writer (:class:`~repro.raster.mappers.ParallelRasterWriter`
+or any mapper exposing ``bind_commit_sink``) and split output into
+full-width strips; SPMD *consumer* stages gate at stage granularity (their
+executor reads the whole input up front) while SPMD producers commit
+per-strip like any other stage.
+
+``Orchestrator`` also owns its scratch space: a workdir created by the
+orchestrator itself (no ``workdir=`` argument) is removed by
+:meth:`cleanup` / the context-manager exit; a caller-supplied workdir is
+left alone.
 """
 from __future__ import annotations
 
 import dataclasses
 import pathlib
+import shutil
 import tempfile
+import threading
 import time
-from typing import Callable, Dict, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
+from repro.core.dag import (
+    EdgeFanout,
+    EdgeQueue,
+    EdgeStats,
+    PipelineCancelled,
+    RegionGate,
+    UpstreamFailed,
+)
 from repro.core.execplan import CacheStats, PlanCache, global_plan_cache
 from repro.core.pipeline import Pipeline
 from repro.core.process_object import Mapper
@@ -39,11 +96,15 @@ class Stage:
 
     ``build(input_paths: dict[name, path], output_path) -> (Pipeline, Mapper)``
     wires the stage graph, reading its inputs from the given RTIF paths and
-    terminating in a writer at ``output_path``.
+    terminating in a writer at ``output_path``.  Under ``pipelined=True``
+    the build runs as soon as the input files have headers — it must not
+    read input *pixels* (geometry-only, see the module docstring).
 
     ``scheduler`` picks how the stage's ``n_workers`` threads share regions:
     ``"work_stealing"`` (default — one shared queue, idle workers steal),
     ``"static"`` or ``"lpt"`` (precomputed slices, still run concurrently).
+    A pipelined consumer stage is handed regions in readiness (commit) order
+    instead — see :func:`~repro.core.streaming.run_pool`.
 
     ``executor`` selects the execution engine: ``"pool"`` (default — the
     concurrent streaming driver) or ``"spmd"`` (the shard_map
@@ -68,9 +129,52 @@ class Stage:
 class StageResult:
     name: str
     path: str
-    seconds: float
+    seconds: float  # stage active time (overlaps other stages when pipelined)
     regions: int
     cache_stats: Optional[CacheStats] = None
+
+
+class _WorkerBudget:
+    """Shared worker budget for concurrently-running stages.
+
+    A stage acquires its (clamped) worker count before building and releases
+    it when done.  Acquisition order follows data readiness — producers
+    begin before their consumers wait on edge-open — so budget waits only
+    ever point *up* the DAG and cannot cycle.  ``abort`` wakes all waiters
+    into :class:`PipelineCancelled`."""
+
+    def __init__(self, total: Optional[int]):
+        self.total = total
+        self._free = total if total is not None else 0
+        self._cv = threading.Condition()
+        self._aborted = False
+
+    def clamp(self, n: int) -> int:
+        return n if self.total is None else max(1, min(n, self.total))
+
+    def acquire(self, n: int) -> int:
+        n = self.clamp(n)
+        if self.total is None:
+            return n
+        with self._cv:
+            while self._free < n and not self._aborted:
+                self._cv.wait(0.1)
+            if self._aborted:
+                raise PipelineCancelled("orchestrator run aborted")
+            self._free -= n
+        return n
+
+    def release(self, n: int) -> None:
+        if self.total is None:
+            return
+        with self._cv:
+            self._free += n
+            self._cv.notify_all()
+
+    def abort(self) -> None:
+        with self._cv:
+            self._aborted = True
+            self._cv.notify_all()
 
 
 class Orchestrator:
@@ -79,6 +183,9 @@ class Orchestrator:
         stages: Sequence[Stage],
         workdir: Optional[str] = None,
         plan_cache: Optional[PlanCache] = None,
+        pipelined: bool = False,
+        queue_capacity: int = 2,
+        max_workers: Optional[int] = None,
     ):
         self.stages = list(stages)
         names = [s.name for s in self.stages]
@@ -102,13 +209,60 @@ class Orchestrator:
             if missing:
                 raise ValueError(f"stage {s.name}: unknown inputs {missing}")
             known.add(s.name)
+        if queue_capacity < 1:
+            raise ValueError("queue_capacity must be >= 1")
+        if max_workers is not None and max_workers < 1:
+            raise ValueError("max_workers must be >= 1 (or None for unbounded)")
+        self._owns_workdir = workdir is None
         self.workdir = pathlib.Path(workdir or tempfile.mkdtemp(prefix="orch_"))
         self.workdir.mkdir(parents=True, exist_ok=True)
         # one registry across every stage and executor kind (process-wide by
         # default): streaming and SPMD stages share compiled plans
         self.plan_cache = plan_cache if plan_cache is not None else global_plan_cache()
+        self.pipelined = pipelined
+        self.queue_capacity = queue_capacity
+        self.max_workers = max_workers
+        #: (producer, consumer) -> EdgeStats of the last pipelined run
+        self.edge_stats: Dict[Tuple[str, str], EdgeStats] = {}
+        self._active_edges: List[EdgeQueue] = []
+        self._active_budget: Optional[_WorkerBudget] = None
+        self._cancelled = threading.Event()
 
-    def _run_stage(self, stage: Stage, pipeline: Pipeline, mapper: Mapper):
+    # -- lifecycle -------------------------------------------------------------
+    def cleanup(self) -> None:
+        """Remove the workdir if this orchestrator created it (the
+        ``tempfile.mkdtemp`` default); caller-supplied workdirs are left
+        alone.  Idempotent."""
+        if self._owns_workdir and self.workdir.exists():
+            shutil.rmtree(self.workdir, ignore_errors=True)
+
+    def __enter__(self) -> "Orchestrator":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.cleanup()
+
+    def cancel(self) -> None:
+        """Abort an in-flight pipelined run: every blocked producer/consumer
+        unwinds with :class:`PipelineCancelled` instead of hanging."""
+        self._cancelled.set()
+        exc = PipelineCancelled("cancelled by Orchestrator.cancel()")
+        for edge in list(self._active_edges):
+            edge.cancel(exc)
+        budget = self._active_budget
+        if budget is not None:
+            budget.abort()
+
+    # -- single-stage execution ------------------------------------------------
+    def _run_stage(
+        self,
+        stage: Stage,
+        pipeline: Pipeline,
+        mapper: Mapper,
+        n_workers: Optional[int] = None,
+        region_gate: Optional[RegionGate] = None,
+        in_order: bool = False,
+    ):
         if stage.executor == "spmd":
             import jax
 
@@ -118,21 +272,25 @@ class Orchestrator:
             return ParallelExecutor(
                 pipeline, mapper, devices=devices, plan_cache=self.plan_cache
             ).run()
+        workers = n_workers if n_workers is not None else stage.n_workers
         splitter = stage.splitter or StripeSplitter(
             n_splits=max(4, stage.n_workers * 4)
         )
         # the stage's workers run concurrently against one shared region
-        # queue (work stealing) or their schedule slices, with the
-        # orchestrator-wide PlanCache — a uniform split compiles once
+        # queue (work stealing / readiness order) or their schedule slices,
+        # with the orchestrator-wide PlanCache — a uniform split compiles once
         return run_pool(
             pipeline, mapper, splitter,
-            n_workers=stage.n_workers,
+            n_workers=workers,
             scheduler=stage.scheduler,
             use_jit=stage.use_jit,
             plan_cache=self.plan_cache,
+            region_gate=region_gate,
+            in_order=in_order,
         )
 
-    def run(self, verbose: bool = False) -> Dict[str, StageResult]:
+    # -- barrier mode (the differential oracle) --------------------------------
+    def _run_barrier(self, verbose: bool) -> Dict[str, StageResult]:
         paths: Dict[str, str] = {}
         results: Dict[str, StageResult] = {}
         for stage in self.stages:
@@ -140,9 +298,9 @@ class Orchestrator:
             pipeline, mapper = stage.build(
                 {i: paths[i] for i in stage.inputs}, out_path
             )
-            t0 = time.time()
+            t0 = time.perf_counter()
             res = self._run_stage(stage, pipeline, mapper)
-            dt = time.time() - t0
+            dt = time.perf_counter() - t0
             paths[stage.name] = out_path
             results[stage.name] = StageResult(
                 stage.name, out_path, dt, res.regions_processed, res.cache_stats
@@ -151,3 +309,161 @@ class Orchestrator:
                 print(f"[orchestrator] {stage.name}: {res.regions_processed} "
                       f"regions in {dt:.2f}s → {out_path}")
         return results
+
+    # -- pipelined mode --------------------------------------------------------
+    def _run_pipelined(self, verbose: bool) -> Dict[str, StageResult]:
+        consumers_of: Dict[str, List[str]] = {s.name: [] for s in self.stages}
+        for s in self.stages:
+            for i in s.inputs:
+                consumers_of[i].append(s.name)
+        edges: Dict[Tuple[str, str], EdgeQueue] = {
+            (i, s.name): EdgeQueue(i, s.name, self.queue_capacity)
+            for s in self.stages
+            for i in s.inputs
+        }
+        # arm backpressure NOW for region-granular (pool) consumers: their
+        # producers then never run more than queue_capacity strips ahead,
+        # even during the consumer's build/warm-up window.  SPMD consumers
+        # gate at stage granularity, so their edges stay unthrottled.
+        for s in self.stages:
+            if s.executor == "pool":
+                for i in s.inputs:
+                    edges[(i, s.name)].consumer_started()
+        paths = {s.name: str(self.workdir / f"{s.name}.rtif") for s in self.stages}
+        results: Dict[str, StageResult] = {}
+        errors: Dict[str, BaseException] = {}
+        budget = _WorkerBudget(self.max_workers)
+        self.edge_stats = {k: e.stats for k, e in edges.items()}
+        self._active_edges = list(edges.values())
+        self._active_budget = budget
+        self._cancelled.clear()
+        lock = threading.Lock()  # guards results/errors across stage threads
+
+        def abort_all(exc: BaseException) -> None:
+            for e in edges.values():
+                e.cancel(exc)
+            budget.abort()
+
+        def run_stage(stage: Stage) -> None:
+            inbound = {i: edges[(i, stage.name)] for i in stage.inputs}
+            outbound = [edges[(stage.name, c)] for c in consumers_of[stage.name]]
+            fanout = EdgeFanout(outbound) if outbound else None
+            acquired = 0
+            try:
+                # producers open their edge at mapper.begin — only then does
+                # the consumer's build see a readable RTIF header
+                for e in inbound.values():
+                    e.wait_open()
+                acquired = budget.acquire(
+                    stage.n_workers if stage.executor == "pool" else 1
+                )
+                pipeline, mapper = stage.build(
+                    {i: paths[i] for i in stage.inputs}, paths[stage.name]
+                )
+                if fanout is not None:
+                    if not hasattr(mapper, "bind_commit_sink"):
+                        raise ValueError(
+                            f"stage {stage.name}: pipelined producer stages "
+                            "must terminate in a commit-capable writer "
+                            "(ParallelRasterWriter or a mapper exposing "
+                            "bind_commit_sink) — got "
+                            f"{type(mapper).__name__}"
+                        )
+                    mapper.bind_commit_sink(fanout)
+                t0 = time.perf_counter()
+                if stage.executor == "spmd":
+                    # the SPMD executor reads its whole input up front:
+                    # stage-granularity gating, and no backpressure upstream
+                    # (consumer_started is never signalled)
+                    for e in inbound.values():
+                        e.wait_complete()
+                    res = self._run_stage(stage, pipeline, mapper)
+                else:
+                    gate = (
+                        RegionGate(
+                            {paths[i]: e for i, e in inbound.items()}
+                        )
+                        if inbound
+                        else None
+                    )
+                    for e in inbound.values():
+                        e.consumer_started()
+                    res = self._run_stage(
+                        stage, pipeline, mapper,
+                        n_workers=acquired, region_gate=gate,
+                        # producers offer strips in the consumers' row order:
+                        # backpressure then tracks the real commit frontier
+                        # and max_in_flight stays at queue_capacity
+                        in_order=bool(outbound),
+                    )
+                dt = time.perf_counter() - t0
+                for e in inbound.values():
+                    e.consumer_finished()
+                if fanout is not None:
+                    # run_pool/ParallelExecutor already closed the writer
+                    # (mapper.end → StripWriter.close → final flush), so every
+                    # commit has fired; mark the edges complete
+                    fanout.close()
+                with lock:
+                    results[stage.name] = StageResult(
+                        stage.name, paths[stage.name], dt,
+                        res.regions_processed, res.cache_stats,
+                    )
+                if verbose:
+                    print(f"[orchestrator] {stage.name}: "
+                          f"{res.regions_processed} regions in {dt:.2f}s → "
+                          f"{paths[stage.name]}")
+            except BaseException as exc:  # noqa: BLE001 — crosses threads
+                with lock:
+                    errors[stage.name] = exc
+                if fanout is not None:
+                    fanout.fail(stage.name, exc)  # consumers: UpstreamFailed
+                abort_all(exc)  # everyone else: PipelineCancelled
+            finally:
+                if acquired:
+                    budget.release(acquired)
+
+        threads = [
+            threading.Thread(
+                target=run_stage, args=(s,), name=f"stage:{s.name}", daemon=True
+            )
+            for s in self.stages
+        ]
+        try:
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join()
+        finally:
+            self._active_edges = []
+            self._active_budget = None
+        if errors:
+            # surface the ROOT failure: a consumer cancelled by its producer
+            # re-raises the producer's original exception, not the wrapper
+            root = None
+            for exc in errors.values():
+                if not isinstance(exc, (UpstreamFailed, PipelineCancelled)):
+                    root = exc
+                    break
+            if root is None:
+                for exc in errors.values():
+                    if isinstance(exc, UpstreamFailed):
+                        root = exc.cause
+                        break
+            raise root if root is not None else next(iter(errors.values()))
+        return results
+
+    def run(
+        self, verbose: bool = False, pipelined: Optional[bool] = None
+    ) -> Dict[str, StageResult]:
+        """Execute the stage DAG; returns per-stage results keyed by name.
+
+        ``pipelined`` overrides the constructor default for this run:
+        ``False`` is the sequential barrier oracle, ``True`` streams
+        connected stages into each other at region granularity.  After a
+        pipelined run, :attr:`edge_stats` holds per-edge counters
+        (``max_in_flight``, ``commits``, ``waits``, ``overdrafts``)."""
+        mode = self.pipelined if pipelined is None else pipelined
+        if mode:
+            return self._run_pipelined(verbose)
+        return self._run_barrier(verbose)

@@ -162,6 +162,29 @@ class WorkStealingQueue:
             return first
 
 
+class FifoQueue:
+    """Shared strictly-in-order queue: every worker takes the next unclaimed
+    item.  Used by gated (pipelined-DAG) pool runs, where regions sorted by
+    row offset become ready in roughly commit order — handing them out in
+    that order keeps consumer workers on *ready* regions instead of parking
+    each worker at its static block start far ahead of the producer's commit
+    frontier (which would defeat both pipelining and the bounded in-flight
+    window)."""
+
+    def __init__(self, n_items: int):
+        self._n = n_items
+        self._next = 0
+        self._lock = threading.Lock()
+
+    def take(self, worker: int) -> Optional[int]:
+        with self._lock:
+            if self._next >= self._n:
+                return None
+            i = self._next
+            self._next += 1
+            return i
+
+
 def makespan(
     schedule: List[List[int]],
     regions: Sequence[ImageRegion],

@@ -21,6 +21,60 @@ class Splitter:
         raise NotImplementedError
 
 
+class RowCoverage:
+    """A monotone set of committed row intervals (half-open ``[lo, hi)``).
+
+    The region-granularity DAG scheduler tracks which output rows a producer
+    stage has committed to disk; consumers derive readiness from it.  Commits
+    may arrive out of order (work-stealing producers, coalesced write-behind
+    runs), so coverage is a sorted list of disjoint intervals that merges
+    neighbors on insert.  Not thread-safe — callers (the edge queues) hold
+    their own lock.
+    """
+
+    def __init__(self) -> None:
+        self._ivals: List[List[int]] = []  # sorted, disjoint, non-adjacent
+
+    def add(self, lo: int, hi: int) -> None:
+        """Mark rows ``[lo, hi)`` covered (idempotent, merges neighbors)."""
+        if hi <= lo:
+            return
+        out: List[List[int]] = []
+        inserted = False
+        for a, b in self._ivals:
+            if b < lo or hi < a:  # disjoint and non-adjacent: keep as-is
+                if a > hi and not inserted:
+                    out.append([lo, hi])
+                    inserted = True
+                out.append([a, b])
+            else:  # overlap or touch: absorb into the new interval
+                lo, hi = min(lo, a), max(hi, b)
+        if not inserted:
+            out.append([lo, hi])
+            out.sort()
+        self._ivals = out
+
+    def covers(self, lo: int, hi: int) -> bool:
+        """True when every row of ``[lo, hi)`` is covered."""
+        if hi <= lo:
+            return True
+        for a, b in self._ivals:
+            if a <= lo and hi <= b:
+                return True
+            if a > lo:
+                break
+        return False
+
+    def covered_rows(self) -> int:
+        return sum(b - a for a, b in self._ivals)
+
+    def intervals(self) -> List[tuple]:
+        return [(a, b) for a, b in self._ivals]
+
+    def __repr__(self) -> str:  # pragma: no cover — debugging aid
+        return f"RowCoverage({self._ivals})"
+
+
 def padded_strip_rows(rows: int, n_workers: int) -> tuple[int, int]:
     """Uniform SPMD strip height + virtual row padding for ``rows`` output
     rows over ``n_workers`` strips: ``(H, pad)`` with ``H = ceil(rows / n)``

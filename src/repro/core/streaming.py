@@ -74,6 +74,7 @@ from repro.core.pipeline import Pipeline
 from repro.core.process_object import Mapper, PersistentFilter
 from repro.core.region import ImageRegion
 from repro.core.scheduling import (
+    FifoQueue,
     WorkStealingQueue,
     lpt_schedule,
     static_schedule,
@@ -151,6 +152,7 @@ class StreamingExecutor:
         plan_cache: Optional[PlanCache] = None,
         prefetch: int = 2,
         max_cached_plans: Optional[int] = None,
+        region_gate=None,
     ):
         if scheduler not in _SCHEDULERS:
             raise ValueError(scheduler)
@@ -168,6 +170,10 @@ class StreamingExecutor:
             plan_cache if plan_cache is not None else PlanCache(max_cached_plans)
         )
         self.prefetch = max(0, int(prefetch))
+        # region-availability gate (pipelined stage DAGs): wait(desc) blocks
+        # until the rows the region reads are committed upstream; done(desc)
+        # releases them once the region's output has been handed off
+        self.region_gate = region_gate
 
     def my_regions(self) -> List[ImageRegion]:
         info = self.pipeline.info(self.mapper)
@@ -185,6 +191,10 @@ class StreamingExecutor:
         # describe pass only; the O(graph) closure tree is lowered by the
         # registry on misses — cache hits never rebuild it
         desc = self.pipeline.describe_pull(self.mapper, region)
+        if self.region_gate is not None:
+            # block (on the prefetch thread) until the input rows this region
+            # actually reads are committed by the upstream stage
+            self.region_gate.wait(desc)
         fn = self.plan_cache.compiled_for(
             desc, lambda: self.pipeline.lower_pull(desc)
         )
@@ -211,11 +221,20 @@ class StreamingExecutor:
             nonlocal pstates
             plan, fn, arrays = prep
             out, pstates = fn(arrays, pstates, plan.origins())
+            if self.region_gate is not None:
+                # pacing-only release (the data lives on disk): fire once the
+                # region's pixels are produced and handed to the write stage
+                self.region_gate.done(plan)
             return np.asarray(out)
 
         def produce_sync(region: ImageRegion) -> np.ndarray:
             if compiled_path:
                 return compute(self._prepare(region))
+            if self.region_gate is not None:
+                # non-compiled paths still gate on the described reads
+                desc = pipeline.describe_pull(mapper, region)
+                self.region_gate.wait(desc)
+                self.region_gate.done(desc)
             if self.use_jit and not pipeline.persistent_nodes():
                 # cache=False A/B baseline: the seed's per-region re-jit
                 plan = pipeline.compile_pull(mapper, region)
@@ -311,6 +330,8 @@ def run_pool(
     use_jit: bool = True,
     plan_cache: Optional[PlanCache] = None,
     keep_outputs: bool = False,
+    region_gate=None,
+    in_order: bool = False,
 ) -> StreamResult:
     """Run one pipeline with ``n_workers`` concurrent threads on this host.
 
@@ -321,7 +342,20 @@ def run_pool(
     :class:`PlanCache`, so a uniform split still compiles once.  Per-worker
     persistent states are combined with the filters' reductions, then
     synthesized once — the thread-level analogue of the paper's MPI
-    many-to-one Synthesis."""
+    many-to-one Synthesis.
+
+    ``region_gate`` (pipelined stage DAGs, :mod:`repro.core.dag`) makes the
+    workers block *per region*: each region's describe pass runs first, the
+    gate waits until the input rows it reads are committed upstream, and the
+    gate releases them after the region's output is consumed.  Gated runs
+    hand regions out in strict region order (:class:`FifoQueue`) regardless
+    of ``scheduler`` — readiness follows the producer's commit frontier, so
+    in-order hand-out keeps every worker on ready (or soonest-ready) regions
+    and the per-edge in-flight window bounded.  ``in_order=True`` forces the
+    same FIFO hand-out on an *ungated* run: the pipelined orchestrator sets
+    it on producer stages so strips are offered downstream in the consumers'
+    row order and backpressure tracks the real commit frontier instead of a
+    work-stealing shuffle."""
     if scheduler not in _SCHEDULERS:
         raise ValueError(scheduler)
     n_workers = max(1, int(n_workers))
@@ -349,7 +383,17 @@ def run_pool(
     pixel_counts = [0] * n_workers
     outputs_by_index: Optional[Dict[int, np.ndarray]] = {} if keep_outputs else None
 
-    if scheduler == "work_stealing":
+    if region_gate is not None or in_order:
+        fifo = FifoQueue(len(regions))
+
+        def indices(w):
+            while True:
+                i = fifo.take(w)
+                if i is None:
+                    return
+                yield i
+
+    elif scheduler == "work_stealing":
         wsq = WorkStealingQueue(
             len(regions), n_workers, costs=[cost(r) for r in regions]
         )
@@ -379,8 +423,12 @@ def run_pool(
 
         for i in indices(w):
             region = regions[i]
-            if use_jit:
+            desc = None
+            if use_jit or region_gate is not None:
                 desc = pipeline.describe_pull(mapper, region)
+                if region_gate is not None:
+                    region_gate.wait(desc)  # block until input rows commit
+            if use_jit:
                 fn = cache.compiled_for(desc, lambda: pipeline.lower_pull(desc))
                 out, pstates = fn(desc.read_sources(), pstates, desc.origins())
                 data = np.asarray(out)
@@ -389,6 +437,8 @@ def run_pool(
                     pipeline.pull(mapper, region, persistent_hook=hook)
                 )
             consume(region, data)
+            if region_gate is not None:
+                region_gate.done(desc)  # region consumed: release input rows
             counts[w] += 1
             pixel_counts[w] += region.num_pixels
             if outputs_by_index is not None:

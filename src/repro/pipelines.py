@@ -16,7 +16,7 @@ from typing import Callable, Optional, Tuple
 
 import numpy as np
 
-from repro.core import Mapper, Pipeline, Source
+from repro.core import Mapper, Pipeline, Source, Stage, StripeSplitter
 from repro.filters import (
     Convert,
     HaralickTextures,
@@ -130,6 +130,81 @@ def io_passthrough(src: Source, mapper_factory=None) -> Tuple[Pipeline, Mapper]:
     s = p.add(src)
     m = p.add(_mapper(mapper_factory), [s])
     return p, m
+
+
+def chain_stages(
+    rows_xs: int = 48,
+    cols_xs: int = 32,
+    seed: int = 0,
+    n_workers: int = 2,
+    n_splits: Optional[int] = None,
+    texture_radius: int = 2,
+    levels: int = 8,
+    n_classes: int = 4,
+    use_pallas: bool = False,
+):
+    """Stage list for the ROADMAP chain pansharpen → texture → classify.
+
+    The chain is built for the region-granularity pipelined orchestrator (and
+    runs identically under the barrier oracle):
+
+      * every stage ``build`` is **geometry-only** — in pipelined mode a
+        consumer builds as soon as the upstream RTIF *header* exists, before
+        any upstream pixels do, so the classifier forest is trained here,
+        once, on synthetic texture-feature vectors (never on upstream
+        pixels, unlike :func:`p4_classification` which samples its source);
+      * every stage terminates in a commit-capable
+        :class:`~repro.raster.ParallelRasterWriter` and splits output into
+        full-width strips — the row-granularity commit protocol's contract.
+
+    Returns a list of :class:`~repro.core.Stage` suitable for
+    ``Orchestrator(chain_stages(...), pipelined=True)``.
+    """
+    from repro.filters.texture import FEATURES
+    from repro.raster import ParallelRasterWriter, RasterReader, make_spot6_pair
+
+    # pre-trained model (the paper's classification pipeline also loads a
+    # trained model rather than fitting in-line)
+    rng = np.random.default_rng(seed + 11)
+    X = rng.normal(0.0, 1.0, size=(1024, len(FEATURES))).astype(np.float32)
+    mix = X @ np.linspace(1.0, 2.0, len(FEATURES))
+    edges = np.quantile(mix, np.linspace(0, 1, n_classes + 1)[1:-1])
+    y = np.digitize(mix, edges).astype(np.int64)
+    forest = train_forest(X, y, n_trees=8, max_depth=6, seed=seed)
+    mean, std = X.mean(0), X.std(0) + 1e-6
+
+    splitter = StripeSplitter(n_splits=n_splits) if n_splits else None
+
+    def build_pansharpen(_inputs, out):
+        xs, pan = make_spot6_pair(rows_xs, cols_xs, seed=seed)
+        return p3_pansharpening(
+            xs, pan,
+            mapper_factory=lambda: ParallelRasterWriter(out),
+            use_pallas=use_pallas,
+        )
+
+    def build_texture(inputs, out):
+        return p2_textures(
+            RasterReader(inputs["pansharpen"]),
+            mapper_factory=lambda: ParallelRasterWriter(out),
+            use_pallas=use_pallas, radius=texture_radius, levels=levels,
+        )
+
+    def build_classify(inputs, out):
+        p = Pipeline()
+        s = p.add(RasterReader(inputs["texture"]))
+        f = p.add(RandomForestClassify(forest, mean=mean, std=std), [s])
+        m = p.add(ParallelRasterWriter(out), [f])
+        return p, m
+
+    return [
+        Stage("pansharpen", build_pansharpen, n_workers=n_workers,
+              splitter=splitter),
+        Stage("texture", build_texture, inputs=("pansharpen",),
+              n_workers=n_workers, splitter=splitter),
+        Stage("classify", build_classify, inputs=("texture",),
+              n_workers=n_workers, splitter=splitter),
+    ]
 
 
 ALL = {

@@ -17,7 +17,7 @@ import json
 import os
 import threading
 from concurrent.futures import ThreadPoolExecutor
-from typing import List, Optional, Tuple
+from typing import Callable, List, Optional, Tuple
 
 import numpy as np
 
@@ -123,13 +123,30 @@ class StripWriter:
     ``coalesce_bytes`` (bounding writer memory), on :meth:`flush`, and on
     :meth:`close`; data is only guaranteed on disk after one of those.
     ``coalesce_bytes=0`` disables batching (one syscall per strip, the seed
-    behavior)."""
+    behavior).
 
-    def __init__(self, path: str, info: ImageInfo, coalesce_bytes: int = 8 << 20):
+    **Commit notification**: ``on_commit(row0, row1)`` fires after the bytes
+    of full-width rows ``[row0, row1)`` are actually written (post-``pwrite``
+    / memmap flush) — *not* when ``write`` merely buffers them into a
+    coalescing run.  This is the commit protocol of the region-granularity
+    DAG scheduler (:mod:`repro.core.dag`): a downstream stage may read those
+    rows the moment the hook fires, and coalescing still works because the
+    hook fires once per flushed run, not per buffered strip.  Non-full-width
+    (tile) writes never fire the hook — row-granularity commits are only
+    meaningful for full-width strips."""
+
+    def __init__(
+        self,
+        path: str,
+        info: ImageInfo,
+        coalesce_bytes: int = 8 << 20,
+        on_commit: Optional[Callable[[int, int], None]] = None,
+    ):
         create(path, info)
         self.path = path
         self.info = info
         self.coalesce_bytes = int(coalesce_bytes)
+        self.on_commit = on_commit
         # os.pwrite is POSIX; fall back to a windowed memmap elsewhere so the
         # default raster writer keeps the old write_strip portability
         self._use_pwrite = hasattr(os, "pwrite")
@@ -158,15 +175,20 @@ class StripWriter:
         mm[rs, cs] = data
         mm.flush()
         del mm
+        if self.on_commit is not None and region.col0 == 0 and region.cols == info.cols:
+            self.on_commit(region.row0, region.row1)
 
     def _flush_locked(self) -> None:
         if not self._run:
             return
         buf = self._run[0] if len(self._run) == 1 else np.concatenate(self._run)
-        offset = HEADER_BYTES + self._run_row0 * self.info.cols * self.info.bytes_per_pixel
+        row0, rows = self._run_row0, self._run_rows
+        offset = HEADER_BYTES + row0 * self.info.cols * self.info.bytes_per_pixel
         self._run = []
         self._run_rows = self._run_bytes = 0
         self._pwrite_all(memoryview(buf).cast("B"), offset)
+        if self.on_commit is not None:
+            self.on_commit(row0, row0 + rows)  # the whole run is on disk now
 
     def flush(self) -> None:
         """Force any coalesced pending strips onto disk."""
@@ -201,6 +223,8 @@ class StripWriter:
                             memoryview(data).cast("B"),
                             HEADER_BYTES + region.row0 * info.cols * bpp,
                         )
+                        if self.on_commit is not None:
+                            self.on_commit(region.row0, region.row1)
                         return
                     self._run_row0 = region.row0
                 # the run defers the pwrite past this call, so never hold a

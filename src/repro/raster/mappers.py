@@ -38,7 +38,15 @@ class ParallelRasterWriter(Mapper):
     pwrite on disjoint byte ranges of one shared descriptor).  Static load
     balancing comes from the splitting strategy + schedule, as in the paper;
     the work-stealing pool and the write-behind stage rely on the same
-    disjoint-range safety."""
+    disjoint-range safety.
+
+    For pipelined stage DAGs the writer doubles as the producer end of the
+    region-granularity edge protocol: :meth:`bind_commit_sink` attaches an
+    :class:`~repro.core.dag.EdgeFanout`-style sink whose ``offer`` applies
+    flow control before each strip write and whose ``commit`` fires from the
+    :class:`~repro.raster.io.StripWriter` post-write hook once the strip's
+    bytes are actually on disk (coalescing-aware — see the StripWriter
+    docstring for what "committed" means)."""
 
     thread_safe = True  # pwrite on disjoint ranges, one descriptor
 
@@ -47,12 +55,26 @@ class ParallelRasterWriter(Mapper):
         self.path = path
         self._info: Optional[ImageInfo] = None
         self._writer: Optional[rio.StripWriter] = None
+        self._sink = None
+
+    def bind_commit_sink(self, sink) -> None:
+        """Attach a commit sink (``opened``/``offer``/``commit``/``set_flush``)
+        before the run starts; the orchestrator wires its edge fanouts here."""
+        self._sink = sink
 
     def begin(self, info: ImageInfo) -> None:
         self._info = info
-        self._writer = rio.StripWriter(self.path, info)
+        self._writer = rio.StripWriter(
+            self.path, info,
+            on_commit=self._sink.commit if self._sink is not None else None,
+        )
+        if self._sink is not None:
+            self._sink.set_flush(self._writer.flush)
+            self._sink.opened(info)
 
     def consume(self, out_region: ImageRegion, data: np.ndarray) -> None:
+        if self._sink is not None:
+            self._sink.offer(out_region)  # backpressure before the write
         self._writer.write(out_region, np.asarray(data))
 
     def end(self) -> None:

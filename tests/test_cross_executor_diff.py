@@ -187,3 +187,98 @@ def test_spmd_differential_matrix(subproc, devices):
     out = subproc(CODE_SPMD_DIFF.format(devices=devices), devices=devices,
                   timeout=1800)
     assert f"SPMD_DIFF_OK {devices}" in out
+
+
+# -- pipelined-orchestrator column: mixed pool+SPMD stage DAG -----------------
+# The region-granularity DAG scheduler (repro.core.dag) must be invisible in
+# the pixels: a stage DAG mixing thread-pool streaming stages with a
+# shard_map SPMD stage produces BIT-IDENTICAL per-stage outputs whether the
+# stages run sequentially behind full barriers (the oracle) or concurrently
+# with region-granularity edge streaming — and pipelining adds zero extra
+# plan-cache lowers/compiles (fresh-cache counts match the oracle's exactly).
+# SPMD consumers gate at stage granularity (wait_complete), SPMD producers
+# commit per strip like any pool stage; both directions are covered here.
+# CI runs this as its own job (-k orchestrator) so tier-1 wall time stays
+# flat.
+def test_orchestrator_pipelined_vs_barrier_differential():
+    from repro.core import Orchestrator, PlanCache, Stage
+    from repro.filters import BandMath, SobelGradient, gaussian_smoothing
+    from repro.raster import ParallelRasterWriter, RasterReader
+    from repro.raster import io as rio
+
+    def make_stages():
+        def build_src(_inputs, out):
+            p, m = PP.io_passthrough(
+                _src(48, 32), mapper_factory=lambda: ParallelRasterWriter(out)
+            )
+            return p, m
+
+        def build_smooth(inputs, out):
+            from repro.core import Pipeline
+
+            p = Pipeline()
+            r = p.add(RasterReader(inputs["src"]))
+            g = p.add(gaussian_smoothing(1.0), [r])
+            m = p.add(ParallelRasterWriter(out), [g])
+            return p, m
+
+        def build_edges_spmd(inputs, out):
+            from repro.core import Pipeline
+
+            p = Pipeline()
+            r = p.add(RasterReader(inputs["smooth"]))
+            e = p.add(SobelGradient(), [r])
+            m = p.add(ParallelRasterWriter(out), [e])
+            return p, m
+
+        def build_scale(inputs, out):
+            import jax.numpy as jnp
+
+            from repro.core import Pipeline
+
+            p = Pipeline()
+            r = p.add(RasterReader(inputs["edges"]))
+            s = p.add(BandMath(lambda x: jnp.sqrt(jnp.abs(x) + 1.0),
+                               out_bands=1), [r])
+            m = p.add(ParallelRasterWriter(out), [s])
+            return p, m
+
+        return [
+            Stage("src", build_src, n_workers=2,
+                  splitter=StripeSplitter(n_splits=6)),
+            Stage("smooth", build_smooth, inputs=("src",), n_workers=2,
+                  splitter=StripeSplitter(n_splits=6)),
+            # SPMD consumer (stage-granularity gate) AND SPMD producer
+            # (per-strip commits feed the pool consumer downstream)
+            Stage("edges", build_edges_spmd, inputs=("smooth",), n_workers=1,
+                  executor="spmd"),
+            Stage("scale", build_scale, inputs=("edges",), n_workers=3,
+                  splitter=StripeSplitter(n_splits=4)),
+        ]
+
+    cache_b = PlanCache()
+    with Orchestrator(make_stages(), plan_cache=cache_b) as orch:
+        res = orch.run(pipelined=False)
+        barrier = {k: rio.read_region(v.path) for k, v in res.items()}
+
+    cache_p = PlanCache()
+    with Orchestrator(make_stages(), plan_cache=cache_p, pipelined=True,
+                      queue_capacity=2) as orch:
+        res = orch.run()
+        pipelined = {k: rio.read_region(v.path) for k, v in res.items()}
+        stats = dict(orch.edge_stats)
+
+    assert set(barrier) == set(pipelined) == {"src", "smooth", "edges", "scale"}
+    for name in barrier:
+        np.testing.assert_array_equal(
+            pipelined[name], barrier[name],
+            err_msg=f"stage {name}: pipelined != barrier oracle")
+    assert cache_p.stats.lowers == cache_b.stats.lowers, (
+        cache_b.stats, cache_p.stats)
+    assert cache_p.stats.compiles == cache_b.stats.compiles, (
+        cache_b.stats, cache_p.stats)
+    # pool edges saw region-granularity traffic; the SPMD consumer's inbound
+    # edge gated at stage granularity (no backpressure armed)
+    assert stats[("src", "smooth")].commits > 0
+    assert stats[("edges", "scale")].commits > 0
+    assert stats[("src", "smooth")].releases > 0
