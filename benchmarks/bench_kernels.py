@@ -1,9 +1,24 @@
-"""Kernel microbenchmarks: jnp reference path wall time on CPU (the Pallas
-kernels target TPU; interpret mode is a correctness harness, not a timing
-one).  derived = Mpixels/s (geospatial) or Mtokens/s-equivalents (LM).
+"""Kernel microbenchmarks: jnp reference path vs the Pallas kernels (interpret
+mode on CPU — the tiled grid still jits to XLA, so wall times are real and the
+tiling's cache locality beats the window-stacking jnp references).  derived =
+Mpixels/s (geospatial) or Mtokens/s-equivalents (LM).
+
+``kernel_*_pallas_*`` rows carry the plan-layer fast-path numbers, the
+``kernel_fused_chain_256`` pair measures a Convert+BandMath chain folded into
+the mean-shift kernel versus the same chain as staged jnp passes, and
+``kernel_*_roofline`` rows project each kernel's analytic (flops, bytes)
+through :func:`repro.launch.analysis.roofline_terms` under the same HW model
+as ``bench_roofline`` (us = the TPU step-time lower bound; derived = measured
+CPU throughput as a fraction of that bound's throughput — a projection,
+honestly ≪ 1 on CPU).
+
+The throughput gate: :func:`run` asserts the Pallas rows do not regress below
+the jnp reference rows (the PR-7 acceptance bar — fused throughput ≥ plain
+jnp).  Set ``REPRO_BENCH_NO_GATE=1`` to record without gating.
 """
 from __future__ import annotations
 
+import os
 import time
 from typing import List
 
@@ -11,7 +26,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels import glcm as glcm_k
+from repro.kernels import meanshift as ms_k
+from repro.kernels import pansharpen as ps_k
 from repro.kernels import ref
+from repro.launch.analysis import roofline_terms
+from repro.launch.mesh import HW
 
 
 def _time(fn, *args, repeats=3):
@@ -24,6 +44,26 @@ def _time(fn, *args, repeats=3):
     return best
 
 
+def _gate(name: str, t_jnp: float, t_pallas: float) -> None:
+    """Pallas row must meet the jnp row's throughput (5% timing jitter)."""
+    if os.environ.get("REPRO_BENCH_NO_GATE"):
+        return
+    assert t_pallas <= t_jnp * 1.05, (
+        f"{name}: pallas {t_pallas * 1e3:.1f}ms slower than jnp "
+        f"{t_jnp * 1e3:.1f}ms — fused fast path regressed"
+    )
+
+
+def _roofline_row(name: str, flops: float, bytes_: float, measured_s: float,
+                  pixels: float):
+    """Project the kernel's analytic cost through the bench_roofline HW model:
+    us = TPU step-time lower bound, derived = measured/bound throughput."""
+    terms = roofline_terms(flops, bytes_, 0.0, HW)
+    bound = terms["step_time_lower_bound_s"]
+    return (name, bound * 1e6,
+            round(bound / measured_s, 6) if measured_s else 0.0)
+
+
 def run() -> List:
     rng = np.random.default_rng(0)
     out = []
@@ -34,17 +74,56 @@ def run() -> List:
     f = jax.jit(lambda b: ref.glcm_features_ref(b, 2, (0, 1), 8, 0.0, 4096.0))
     t = _time(f, band)
     out.append(("kernel_glcm_ref_256", t * 1e6, H * W / t / 1e6))
+    f = jax.jit(lambda b: glcm_k.glcm_features(b, 2, (0, 1), 8, 0.0, 4096.0))
+    tp = _time(f, band)
+    out.append(("kernel_glcm_pallas_256", tp * 1e6, H * W / tp / 1e6))
+    _gate("glcm", t, tp)
+    # per pixel: 25-px window × 8² joint histogram scatter + 5 feature sums
+    out.append(_roofline_row(
+        "kernel_glcm_roofline", H * W * (25 * 64 * 2 + 5 * 64 * 2),
+        (band.size + H * W * 5) * 4, tp, H * W))
 
     xs = jnp.asarray(rng.uniform(0, 4096, (H, W, 4)).astype(np.float32))
     pan = jnp.asarray(rng.uniform(1, 4096, (H + 4, W + 4, 1)).astype(np.float32))
     f = jax.jit(lambda a, b: ref.pansharpen_ref(a, b, 2))
     t = _time(f, xs, pan)
     out.append(("kernel_pansharpen_ref_256", t * 1e6, H * W / t / 1e6))
+    f = jax.jit(lambda a, b: ps_k.pansharpen(a, b, 2))
+    tp = _time(f, xs, pan)
+    out.append(("kernel_pansharpen_pallas_256", tp * 1e6, H * W / tp / 1e6))
+    _gate("pansharpen", t, tp)
+    # per pixel: 25-px box sum + ratio + 4-band multiply
+    out.append(_roofline_row(
+        "kernel_pansharpen_roofline", H * W * (25 + 2 + 4),
+        (xs.size + pan.size + H * W * 4) * 4, tp, H * W))
 
     x = jnp.asarray(rng.uniform(0, 500, (H + 4, W + 4, 4)).astype(np.float32))
     f = jax.jit(lambda a: ref.meanshift_ref(a, 2, 120.0, 2))
     t = _time(f, x)
     out.append(("kernel_meanshift_ref_256", t * 1e6, H * W / t / 1e6))
+    f = jax.jit(lambda a: ms_k.meanshift(a, 2, 120.0, 2))
+    tp = _time(f, x)
+    out.append(("kernel_meanshift_pallas_256", tp * 1e6, H * W / tp / 1e6))
+    _gate("meanshift", t, tp)
+    # per pixel per iter: 25-window × 4-band distance + masked mean (~3 ops/el)
+    out.append(_roofline_row(
+        "kernel_meanshift_roofline", H * W * 2 * (25 * 4 * 3),
+        (x.size * 2) * 4, tp, H * W))
+
+    # fused chain: Convert+BandMath folded into the mean-shift kernel's
+    # pre_fn (ONE pallas call) vs the same chain as staged jnp passes —
+    # the tentpole's fused-vs-jnp wall-time comparison
+    def pre(t_):
+        return ((t_.astype(jnp.float32) - 0.0) / 4096.0 * 255.0) * 0.5 + 1.0
+
+    f = jax.jit(lambda a: ref.meanshift_ref(pre(a), 2, 120.0, 2))
+    t = _time(f, x)
+    out.append(("kernel_fused_chain_jnp_256", t * 1e6, H * W / t / 1e6))
+    f = jax.jit(lambda a: ms_k.meanshift(a, 2, 120.0, 2, pre_fn=pre))
+    tp = _time(f, x)
+    out.append(("kernel_fused_chain_pallas_256", tp * 1e6, H * W / tp / 1e6))
+    out.append(("kernel_fused_speedup", tp * 1e6, t / tp))
+    _gate("fused_chain", t, tp)
 
     BH, S, D = 8, 512, 64
     q = jnp.asarray(rng.normal(size=(BH, S, D)).astype(np.float32))

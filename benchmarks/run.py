@@ -58,6 +58,11 @@ _SNAPSHOT_METRICS = {
     "streaming_compile_count": ("streaming_P2_compiles", "us_per_call"),
     "orchestrator_pipelined_over_barrier": ("orch_chain_pipelined", "derived"),
     "orchestrator_max_in_flight": ("orch_chain_max_in_flight", "us_per_call"),
+    # PR 7 pallas fast path: fused-chain Mpixels/s, pallas-vs-jnp speedup and
+    # the TPU-projected roofline fraction for the heaviest kernel
+    "kernel_fused_chain_mpix_s": ("kernel_fused_chain_pallas_256", "derived"),
+    "kernel_fused_over_jnp": ("kernel_fused_speedup", "derived"),
+    "kernel_meanshift_roofline_fraction": ("kernel_meanshift_roofline", "derived"),
 }
 
 

@@ -25,21 +25,31 @@ counters, see :class:`~repro.core.process_object.ProcessObject`) rather than
 ``id()`` values, so a process-wide registry can never confuse a dead
 pipeline's recycled object ids with a live one's.
 
-Plan lifecycle — every executor follows the same four steps::
+Plan lifecycle — every executor follows the same five steps::
 
       (node, region)
             │ describe          Pipeline.describe_pull — one host graph walk:
             ▼                   exact requests of needs_origin nodes become
       PlanDescription           static-shape WINDOW specs (window_bound hook);
-            │ signature         reads/origins recorded, no closures built
+            │                   reads/origins recorded, no closures built
+            │ fuse              the SAME walk classifies the Pallas fast
+            ▼                   path: pallas_plan() nodes become "pallas"
+      fusion classification     steps and single-consumer pointwise chains
+            │                   feeding them (pointwise_fn) FOLD into the
+            │ signature         kernel — fused nodes leave no records
             ▼
       canonical signature       shape/pad/plan-key statics + node serials +
-            │ registry lookup   window-spec shapes; absolute coordinates and
-            ▼                   window origins stay OUT (traced scalars)
-      PlanCache.compiled_for ── hit ──► _CompiledEntry (reuse, zero lowers)
-            │ miss
-            ▼ lower             Pipeline.lower_pull — closure tree
-      PullPlan.canonical_fn     fn(arrays, pstates, origins) → jit + register
+            │ registry lookup   window-spec shapes + pallas/fusion records;
+            ▼                   absolute coordinates and window origins stay
+      PlanCache.compiled_for    OUT (traced scalars)
+            │         │
+            │         └── hit ──► _CompiledEntry (reuse, zero lowers)
+            ▼ miss
+      lower                     Pipeline.lower_pull — closure tree; pallas
+            │                   steps lower to pallas_body(pre_fns): ONE
+            ▼                   fused Pallas call per strip, the chain's
+      PullPlan.canonical_fn     pre_fns applied on VMEM tiles in-kernel
+                                fn(arrays, pstates, origins) → jit + register
 
 Windowed reads make this lifecycle *total* over P1–P7: a warp's drifting
 request is classified at describe time as a conservative static bounding
@@ -189,6 +199,11 @@ class PlanDescription:
     windows: Tuple[Optional[Tuple[int, int]], ...] = ()
     virtual: bool = False
     pad_rows: int = 0
+    #: serials of nodes the plan lowers to fused Pallas bodies, and of the
+    #: pointwise nodes folded into one — diagnostic mirrors of the
+    #: signature's ``("pallas", ...)`` records (empty on jnp-only plans)
+    pallas_nodes: Tuple[int, ...] = ()
+    fused_nodes: Tuple[int, ...] = ()
 
     def read_sources(self) -> List:
         return read_plan_sources(self.reads, self.windows)

@@ -569,8 +569,15 @@ class ParallelExecutor:
         out_specs = (P(axis, None, None), P())  # states fully reduced → replicated
 
         def make_program():
+            # check_rep=False: shard_map has no replication rule for
+            # pallas_call (the plan-layer Pallas fast path traces one into
+            # the worker body).  The skipped check only guards the claim
+            # that P() outputs are replicated — ours come from psum-style
+            # collectives in _combine_collective, so it holds by
+            # construction.
             fn = shard_map(
-                worker, mesh=self.mesh, in_specs=in_specs, out_specs=out_specs
+                worker, mesh=self.mesh, in_specs=in_specs,
+                out_specs=out_specs, check_rep=False,
             )
             return jax.jit(fn)
 

@@ -55,6 +55,22 @@ accumulate under an in-trace validity mask (rows inside the real image), so
 the masked-persistent case runs through the very same registry body — with
 an all-true mask on real geometry and pad rows masked out on virtual
 geometry.
+
+Pallas fast path: a node whose ``pallas_plan()`` hook is true lowers to the
+fused kernel body from ``pallas_body()`` instead of its ``generate`` — and
+single-consumer runs of pointwise nodes feeding it (``pointwise_fn`` hook:
+dtype converts, band math, quantize-style rescales) fold INTO that body, so
+a registry hit executes one fused Pallas call per strip instead of N jnp
+passes with materialized HBM intermediates.  The fusion decision uses graph
+structure and static node state only, is made identically by the describe
+and the lower walk, and is recorded in the plan signature as a ``"pallas"``
+step (kernel serial + the fused chain's serials), so Pallas and jnp plans of
+one graph never collide in the registry and a warm registry sees zero new
+lowers/compiles.  Fused chain nodes contribute no signature records of their
+own — their pixels exist only inside the kernel's VMEM tiles.  Fusion
+refuses (and the plan falls back to plain node records) for multi-consumer,
+multi-input, origin-aware, persistent, plan-keyed or grid-changing nodes —
+exactly the nodes whose pixels or state must stay observable.
 """
 from __future__ import annotations
 
@@ -112,6 +128,79 @@ class Pipeline:
 
     def persistent_nodes(self) -> List[PersistentFilter]:
         return [n for n in self._nodes if isinstance(n, PersistentFilter)]
+
+    def virtual_rows_safe(self) -> bool:
+        """True when virtual (unclamped-row) describes cannot change pixels.
+
+        The two walk modes agree exactly when every request that can spill
+        past an image's row extent lands on a **source** (the read stage
+        materializes the spill by edge replication either way) — possibly
+        through *row-transparent* filters, whose requests are row-identity:
+        a streamable row-identity filter is row-local, so edge replication
+        commutes through it (``replicate(f(x)) == f(replicate(x))``), and on
+        the Pallas path fused pointwise chains compute over the padded source
+        read outright.  The unsafe shape is spilled rows reaching a
+        row-*stencil* intermediate — the exact walk clamps there and
+        edge-replicates that filter's OUTPUT rows, while the virtual walk
+        computes the spilled rows from edge-replicated SOURCE pixels.  For
+        stacked neighborhood filters (e.g. smoothing → gradient) those
+        conventions produce genuinely different border rows, so such
+        pipelines must keep exact describes.
+
+        The probe is structural (each consumer's requests over top and
+        bottom border strips of its own grid, graph + static node state
+        only), so every describe/lower pair classifies identically.
+        """
+        infos = self.update_information()
+
+        probes_of = {}  # id(n) -> (top, bottom) border probe regions
+        reqs_of = {}  # id(n) -> per-probe request tuples
+        for n in self._nodes:
+            ups = self._inputs[id(n)]
+            if not ups:
+                continue
+            own = infos[id(n)]
+            in_infos = [infos[id(u)] for u in ups]
+            probe_rows = max(1, min(own.rows, 8))
+            probes = (
+                ImageRegion((0, 0), (probe_rows, own.cols)),
+                ImageRegion((own.rows - probe_rows, 0), (probe_rows, own.cols)),
+            )
+            probes_of[id(n)] = probes
+            reqs_of[id(n)] = tuple(
+                n.requested_region(probe, *in_infos) for probe in probes
+            )
+
+        def transparent(u) -> bool:
+            # every request of u is row-identity with its probe region
+            if id(u) not in reqs_of:
+                return False  # sources handled by the caller
+            return all(
+                req.row0 == probe.row0 and req.row1 == probe.row1
+                for probe, reqs in zip(probes_of[id(u)], reqs_of[id(u)])
+                for req in reqs
+            )
+
+        # propagate "may receive out-of-image rows" consumer→producer
+        # (insertion order is topological, so reverse order visits every
+        # consumer before its producers)
+        spilled = set()
+        for n in reversed(self._nodes):
+            ups = self._inputs[id(n)]
+            if not ups:
+                continue
+            in_infos = [infos[id(u)] for u in ups]
+            for probe, reqs in zip(probes_of[id(n)], reqs_of[id(n)]):
+                for u, upi, req in zip(ups, in_infos, reqs):
+                    expands = req.row0 < 0 or req.row1 > upi.rows
+                    if not (expands or id(n) in spilled):
+                        continue
+                    if not self._inputs[id(u)]:
+                        continue  # source: read-stage edge replication
+                    if not transparent(u):
+                        return False
+                    spilled.add(id(u))
+        return True
 
     # -- phase 1: UpdateOutputInformation -------------------------------------
     def update_information(self) -> Dict[int, ImageInfo]:
@@ -256,6 +345,56 @@ class Pipeline:
         sig: List[Tuple] = []  # canonical step records, built by recursion
         persistent: List[PersistentFilter] = []
         built: Dict[Tuple, Tuple[int, Callable]] = {}
+        pallas_serials: List[int] = []  # nodes lowered to fused Pallas bodies
+        fused_serials: List[int] = []  # pointwise nodes folded into a body
+
+        # Pallas fusion census: a pointwise node may fold into its consumer's
+        # kernel only when it has exactly ONE consumer in the graph —
+        # otherwise its pixels are needed materialized elsewhere
+        consumers: Dict[int, int] = {}
+        for _n in self._nodes:
+            for _u in self._inputs[id(_n)]:
+                consumers[id(_u)] = consumers.get(id(_u), 0) + 1
+
+        def fuse_chain(u, req):
+            """Walk the run of fusable pointwise nodes up one input edge.
+
+            Returns ``(chain, deep, deep_req)``: ``chain`` is the
+            consumer→producer list of ``(node, pointwise_fn)`` folded into
+            the kernel, ``deep`` the first node that stays materialized, and
+            ``deep_req`` the region requested of it.  A node fuses only when
+            it is a single-input, single-consumer pointwise filter
+            (``pointwise_fn() is not None``) on its input's grid, with an
+            identity requested region and no origin / persistent / plan-key
+            semantics — anything else refuses and the chain stops there.
+            The decision uses graph structure and static node state only, so
+            the describe and the lower walk always agree.  Because every
+            link shares one grid, the deep node clamps and edge-pads ``req``
+            exactly where each chain node would have, and pointwise fns
+            commute with edge padding — fused output is bit-equal to the
+            unfused chain feeding the same kernel.
+            """
+            chain: List[Tuple[ProcessObject, Callable]] = []
+            cur = u
+            while True:
+                fn = cur.pointwise_fn()
+                if (
+                    fn is None
+                    or cur.n_inputs != 1
+                    or consumers.get(id(cur), 0) != 1
+                    or isinstance(cur, (PersistentFilter, Mapper))
+                    or getattr(cur, "needs_origin", False)
+                    or cur.plan_key(req) is not None
+                ):
+                    return chain, cur, req
+                up = self._inputs[id(cur)][0]
+                own, upi = infos[id(cur)], infos[id(up)]
+                if (own.rows, own.cols) != (upi.rows, upi.cols):
+                    return chain, cur, req
+                if tuple(cur.requested_region(req, upi)) != (req,):
+                    return chain, cur, req
+                chain.append((cur, fn))
+                cur = up
 
         def dyn(value: int) -> int:
             """Register a dynamic (traced) origin scalar; returns its slot."""
@@ -342,12 +481,23 @@ class Pipeline:
             # become conservative static-shape windows (traced origins), so
             # every same-size region lowers to ONE shared trace
             reqs, wbounds = windowed_requests(n, clamped.size, reqs, in_infos)
-            child_fns = [
-                build(u, r, in_window or wb is not None)
-                for u, r, wb in zip(ups, reqs, wbounds)
-            ]
             origin_aware = bool(getattr(n, "needs_origin", False))
             persist = isinstance(n, PersistentFilter)
+            # Pallas fast path: decided identically in describe AND lower
+            # (lower_pull re-asserts signature equality).  Origin-aware and
+            # persistent nodes keep the generic lowering — their traced
+            # scalars / state threading stay outside kernel bodies.
+            pallas_on = not origin_aware and not persist and n.pallas_plan()
+            if pallas_on:
+                fusions = [fuse_chain(u, r) for u, r in zip(ups, reqs)]
+                child_fns = [
+                    build(deep, dreq, in_window) for _, deep, dreq in fusions
+                ]
+            else:
+                child_fns = [
+                    build(u, r, in_window or wb is not None)
+                    for u, r, wb in zip(ups, reqs, wbounds)
+                ]
             if persist and n not in persistent:
                 persistent.append(n)
             oi = (dyn(clamped.row0), dyn(clamped.col0)) if origin_aware else None
@@ -364,12 +514,51 @@ class Pipeline:
             # signatures would disagree on the origin vector length)
             mi = dyn(clamped.row0) if persist and n.supports_mask else None
             winb = wbounds if any(b is not None for b in wbounds) else None
-            sig.append(
-                ("node", n._serial, clamped.size, pads, origin_aware, persist,
-                 n.plan_key(clamped), winb)
-            )
+            if pallas_on:
+                # fused chain nodes contribute no records of their own; the
+                # kernel's record carries their serials, so fused and unfused
+                # plans of one graph can never share a registry entry
+                fused = tuple(
+                    tuple(c._serial for c, _ in chain) for chain, _, _ in fusions
+                )
+                sig.append(
+                    ("pallas", n._serial, clamped.size, pads,
+                     n.plan_key(clamped), fused)
+                )
+                pallas_serials.append(n._serial)
+                for chain, _, _ in fusions:
+                    fused_serials.extend(c._serial for c, _ in chain)
+            else:
+                sig.append(
+                    ("node", n._serial, clamped.size, pads, origin_aware,
+                     persist, n.plan_key(clamped), winb)
+                )
             fn = None
-            if lower:
+            if lower and pallas_on:
+                pre_fns: List[Optional[Callable]] = []
+                for chain, _, _ in fusions:
+                    if not chain:
+                        pre_fns.append(None)
+                        continue
+                    chain_fns = tuple(f for _, f in chain)
+
+                    def composed(t, _fns=chain_fns):
+                        # chain[0] sits nearest the kernel: apply deepest-first
+                        for g in reversed(_fns):
+                            t = g(t)
+                        return t
+
+                    pre_fns.append(composed)
+                body = n.pallas_body(tuple(pre_fns))
+
+                def run_pallas(arrays, origins, ctx, _body=body,
+                               _clamped=clamped, _region=region,
+                               _fns=child_fns):
+                    ins = [f(arrays, origins, ctx) for f in _fns]
+                    return boundary_pad(_body(*ins), _clamped, _region)
+
+                fn = memoize(key, run_pallas)
+            elif lower:
 
                 def run_node(arrays, origins, ctx, _n=n, _clamped=clamped,
                              _region=region, _fns=child_fns, _oi=oi, _ii=ii,
@@ -426,6 +615,8 @@ class Pipeline:
                     if virtual
                     else 0
                 ),
+                pallas_nodes=tuple(pallas_serials),
+                fused_nodes=tuple(fused_serials),
             )
 
         def canonical_fn(arrays, pstates, origins):
@@ -448,6 +639,8 @@ class Pipeline:
             origin_values=static_origins,
             persistent_nodes=persistent_nodes,
             windows=tuple(read_windows),
+            pallas_nodes=tuple(pallas_serials),
+            fused_nodes=tuple(fused_serials),
         )
 
 
@@ -475,6 +668,10 @@ class PullPlan:
     #: per read, the static (rows, cols) window-spec shape for windowed reads
     #: (``needs_origin`` bounding windows), or None for exact covariant reads
     windows: Tuple[Optional[Tuple[int, int]], ...] = ()
+    #: serials of nodes lowered to fused Pallas bodies / of pointwise nodes
+    #: folded into one (diagnostic mirrors of the signature's pallas records)
+    pallas_nodes: Tuple[int, ...] = ()
+    fused_nodes: Tuple[int, ...] = ()
 
     def read_sources(self) -> List[jnp.ndarray]:
         return read_plan_sources(self.reads, self.windows)

@@ -27,7 +27,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import Any, Dict, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -172,6 +172,49 @@ class ProcessObject:
         ``None`` for an input to keep its exact request (no windowing).
         """
         return tuple(None for _ in range(self.n_inputs))
+
+    # -- the plan layer's Pallas fast path -----------------------------------
+    def pointwise_fn(self) -> Optional[Callable]:
+        """Pure elementwise array→array equivalent of ``generate`` — the
+        *fusion* hook of the plan layer's Pallas fast path.
+
+        A zero-halo filter whose ``generate(region, x)`` is ``f(x)`` applied
+        elementwise (dtype casts, linear rescales, band arithmetic) may
+        return that ``f`` here.  The plan walk then folds a single-consumer
+        chain of such nodes into the downstream Pallas kernel's body — ``f``
+        runs on the VMEM tile ahead of the neighborhood math, and the
+        chain's HBM intermediates are never materialized.  ``f`` must
+        preserve the leading (row, col) shape and be region-independent: it
+        is applied to *haloed, edge-padded* tiles, where elementwise
+        semantics make pad-then-apply equal apply-then-pad, so fused and
+        unfused plans agree bit-exactly.  Return None (default) to never
+        fuse.
+        """
+        return None
+
+    def pallas_plan(self) -> bool:
+        """Decision hook of the Pallas fast path, consulted by BOTH the
+        describe and the lower walk — the decision is recorded in the plan
+        signature and the lower pass re-asserts signature equality, so it
+        must be deterministic in (node, environment); kernel-backed filters
+        return ``kernels.ops.resolve_use_pallas(self.use_pallas)``.  True
+        means the plan layer replaces this node's ``generate`` with the
+        fused body from :meth:`pallas_body` and fuses upstream pointwise
+        chains into it."""
+        return False
+
+    def pallas_body(self, pre_fns: Tuple[Optional[Callable], ...]) -> Callable:
+        """Body hook of the Pallas fast path, called at LOWER time only.
+
+        ``pre_fns`` has one entry per input: the composed ``pointwise_fn``
+        chain fused onto that input (to be applied to the raw upstream
+        array inside the kernel), or None when nothing fused.  Returns
+        ``body(*inputs) -> out`` replacing ``generate`` in the lowered
+        closure; ``inputs[i]`` is the array delivered below the fused
+        chain, covering this node's i-th requested region."""
+        raise NotImplementedError(
+            f"{self.name}: pallas_plan() is True but pallas_body() is missing"
+        )
 
     def __repr__(self) -> str:
         return f"<{type(self).__name__} {self.name!r}>"

@@ -17,11 +17,15 @@ Three layers make the hot loop run at hardware speed:
      signature across every stripe, borders included.
   2. **PlanCache** — the shared compiled-plan registry of the ExecutionPlan
      layer (:mod:`repro.core.execplan`), keyed by plan signature.  A uniform
-     stripe split compiles exactly once per distinct signature (interior
-     stripes share one entry; border stripes with different clamp/pad
-     geometry get their own — except windowed reads, whose border spill is
-     materialized at the read stage and which therefore share the interior
-     entry), and registry *hits* run the cheap describe pass only — the
+     stripe split compiles exactly ONCE: border stripes describe against the
+     virtual padded geometry (no row clamping — the halo spill is
+     materialized by edge replication at the read stage, exactly like
+     windowed reads and the SPMD prober), so top/interior/bottom all share
+     the interior entry.  Pipelines whose persistent filters are not
+     mask-aware, or whose halo requests land on intermediate filters
+     (stacked neighborhood filters — see ``Pipeline.virtual_rows_safe``),
+     keep exact clamped describes (one entry per border
+     geometry).  Registry *hits* run the cheap describe pass only — the
      lower pass (closure construction) happens on misses.
      Hit/miss/compile/lower/eviction counts are surfaced in
      ``StreamResult.cache_stats``; the same registry serves the SPMD
@@ -83,6 +87,27 @@ from repro.core.scheduling import (
 from repro.core.splitting import Splitter, StripeSplitter
 
 _SCHEDULERS = ("static", "lpt", "work_stealing")
+
+
+def _virtual_describe_ok(pipeline: Pipeline) -> bool:
+    """True when the streaming drivers may describe every strip against the
+    virtual padded geometry (no row clamping).  Two structural conditions:
+
+      * any persistent filter must be mask-aware — under virtual geometry a
+        border strip's accumulation region can include edge-replicated pad
+        rows that only a validity mask (``supports_mask``) keeps out of the
+        reduction;
+      * every row-spilling halo request must land directly on a source
+        (:meth:`Pipeline.virtual_rows_safe`) — a halo landing on an
+        intermediate filter (stacked neighborhood filters) is clamped and
+        output-replicated by the exact walk but *computed* from replicated
+        source rows by the virtual walk, so those pipelines keep the exact
+        per-border describes to preserve the eager oracle's border pixels.
+    """
+    return (
+        all(p.supports_mask for p in pipeline.persistent_nodes())
+        and pipeline.virtual_rows_safe()
+    )
 
 
 class _WriteBehind:
@@ -174,6 +199,13 @@ class StreamingExecutor:
         # until the rows the region reads are committed upstream; done(desc)
         # releases them once the region's output has been handed off
         self.region_gate = region_gate
+        # Border strips describe against the virtual padded geometry (like the
+        # SPMD prober), so a striped halo run shares ONE interior signature:
+        # the row spill of border halos is materialized at the read stage
+        # instead of being clamped into a per-border plan.  Persistent filters
+        # that are not mask-aware would accumulate the replicated pad rows, so
+        # those pipelines keep the exact clamped describes.
+        self.describe_virtual = _virtual_describe_ok(pipeline)
 
     def my_regions(self) -> List[ImageRegion]:
         info = self.pipeline.info(self.mapper)
@@ -189,8 +221,11 @@ class StreamingExecutor:
     # -- the prefetch stage: host-side planning + source reads ----------------
     def _prepare(self, region: ImageRegion):
         # describe pass only; the O(graph) closure tree is lowered by the
-        # registry on misses — cache hits never rebuild it
-        desc = self.pipeline.describe_pull(self.mapper, region)
+        # registry on misses — cache hits never rebuild it.  Virtual geometry
+        # (when safe) folds border strips onto the interior signature.
+        desc = self.pipeline.describe_pull(
+            self.mapper, region, virtual=self.describe_virtual
+        )
         if self.region_gate is not None:
             # block (on the prefetch thread) until the input rows this region
             # actually reads are committed by the upstream stage
@@ -231,8 +266,11 @@ class StreamingExecutor:
             if compiled_path:
                 return compute(self._prepare(region))
             if self.region_gate is not None:
-                # non-compiled paths still gate on the described reads
-                desc = pipeline.describe_pull(mapper, region)
+                # non-compiled paths still gate on the described reads (the
+                # gate clamps virtual row spill to the committed extent)
+                desc = pipeline.describe_pull(
+                    mapper, region, virtual=self.describe_virtual
+                )
                 self.region_gate.wait(desc)
                 self.region_gate.done(desc)
             if self.use_jit and not pipeline.persistent_nodes():
@@ -378,6 +416,9 @@ def run_pool(
                 mapper.consume(region, data)
 
     persistent = pipeline.persistent_nodes()
+    # same border-strip virtualization as StreamingExecutor._prepare: all
+    # workers then land on the one interior signature (single lower+compile)
+    describe_virtual = _virtual_describe_ok(pipeline)
     worker_states = [{p.name: p.reset() for p in persistent} for _ in range(n_workers)]
     counts = [0] * n_workers
     pixel_counts = [0] * n_workers
@@ -425,7 +466,9 @@ def run_pool(
             region = regions[i]
             desc = None
             if use_jit or region_gate is not None:
-                desc = pipeline.describe_pull(mapper, region)
+                desc = pipeline.describe_pull(
+                    mapper, region, virtual=describe_virtual
+                )
                 if region_gate is not None:
                     region_gate.wait(desc)  # block until input rows commit
             if use_jit:

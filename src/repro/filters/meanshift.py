@@ -15,6 +15,8 @@ dynamic-load-balancing future work; our LPT scheduler targets exactly this.
 """
 from __future__ import annotations
 
+from typing import Optional
+
 import jax.numpy as jnp
 import numpy as np
 
@@ -43,10 +45,14 @@ def meanshift_ref(x: jnp.ndarray, hs: int, hr: float, n_iter: int) -> jnp.ndarra
 
 
 class MeanShift(Filter):
+    """``use_pallas`` is tri-state (``kernels.ops.resolve_use_pallas``):
+    True forces the Pallas kernel (interpret mode on CPU), False the jnp
+    reference, None defers to ``REPRO_USE_PALLAS`` / the backend."""
+
     cost_per_pixel = 40.0
 
     def __init__(self, hs: int = 3, hr: float = 100.0, n_iter: int = 4,
-                 use_pallas: bool = False, name=None):
+                 use_pallas: Optional[bool] = None, name=None):
         super().__init__(name)
         self.hs, self.hr, self.n_iter = hs, hr, n_iter
         self.use_pallas = use_pallas
@@ -58,8 +64,24 @@ class MeanShift(Filter):
         return (out_region.pad(self.hs),)
 
     def generate(self, out_region: ImageRegion, x: jnp.ndarray) -> jnp.ndarray:
-        if self.use_pallas:
-            from repro.kernels import meanshift as msk
+        from repro.kernels import ops  # deferred: kernels.ref imports filters
 
-            return msk.meanshift(x, self.hs, self.hr, self.n_iter)
-        return meanshift_ref(x, self.hs, self.hr, self.n_iter)
+        return ops.meanshift(
+            x, self.hs, self.hr, self.n_iter, use_pallas=self.use_pallas
+        )
+
+    # -- plan-layer Pallas fast path -----------------------------------------
+    def pallas_plan(self) -> bool:
+        from repro.kernels import ops
+
+        return ops.resolve_use_pallas(self.use_pallas)
+
+    def pallas_body(self, pre_fns=(None,)):
+        from repro.kernels import meanshift as msk
+
+        def body(x):
+            return msk.meanshift(
+                x, self.hs, self.hr, self.n_iter, pre_fn=pre_fns[0]
+            )
+
+        return body

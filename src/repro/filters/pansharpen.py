@@ -10,6 +10,8 @@ filter; see ``repro.pipelines.pansharpening``.
 """
 from __future__ import annotations
 
+from typing import Optional
+
 import jax.numpy as jnp
 import numpy as np
 
@@ -28,10 +30,15 @@ def pansharpen_ref(xs_up: jnp.ndarray, pan: jnp.ndarray, radius: int) -> jnp.nda
 
 
 class PansharpenFuse(Filter):
+    """``use_pallas`` is tri-state (``kernels.ops.resolve_use_pallas``):
+    True forces the Pallas kernel (interpret mode on CPU), False the jnp
+    reference, None defers to ``REPRO_USE_PALLAS`` / the backend."""
+
     n_inputs = 2  # (xs_up, pan)
     cost_per_pixel = 6.0
 
-    def __init__(self, radius: int = 2, use_pallas: bool = False, name=None):
+    def __init__(self, radius: int = 2, use_pallas: Optional[bool] = None,
+                 name=None):
         super().__init__(name)
         self.radius = radius
         self.use_pallas = use_pallas
@@ -45,8 +52,24 @@ class PansharpenFuse(Filter):
         return (out_region, out_region.pad(self.radius))
 
     def generate(self, out_region: ImageRegion, xs_up, pan) -> jnp.ndarray:
-        if self.use_pallas:
-            from repro.kernels import pansharpen as psk
+        from repro.kernels import ops  # deferred: kernels.ref imports filters
 
-            return psk.pansharpen(xs_up, pan, self.radius)
-        return pansharpen_ref(xs_up, pan, self.radius)
+        return ops.pansharpen(xs_up, pan, self.radius, use_pallas=self.use_pallas)
+
+    # -- plan-layer Pallas fast path -----------------------------------------
+    def pallas_plan(self) -> bool:
+        from repro.kernels import ops
+
+        return ops.resolve_use_pallas(self.use_pallas)
+
+    def pallas_body(self, pre_fns=(None, None)):
+        from repro.kernels import pansharpen as psk
+
+        pre_xs, pre_pan = pre_fns
+
+        def body(xs_up, pan):
+            return psk.pansharpen(
+                xs_up, pan, self.radius, pre_xs=pre_xs, pre_pan=pre_pan
+            )
+
+        return body

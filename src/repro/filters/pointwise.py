@@ -4,6 +4,7 @@ Zero-halo, region-independent by construction.
 """
 from __future__ import annotations
 
+import functools
 from typing import Callable
 
 import jax.numpy as jnp
@@ -40,6 +41,10 @@ class Convert(Filter):
         y = jnp.clip(y, min(o0, o1), max(o0, o1))
         return y.astype(self.dtype)
 
+    def pointwise_fn(self):
+        # generate() is elementwise and ignores the region — fusable as-is
+        return functools.partial(self.generate, None)
+
 
 class BandMath(Filter):
     """Apply an arbitrary pointwise function of the band vector."""
@@ -56,6 +61,11 @@ class BandMath(Filter):
 
     def generate(self, out_region: ImageRegion, x: jnp.ndarray) -> jnp.ndarray:
         return self.fn(x.astype(jnp.float32)).astype(self.out_dtype)
+
+    def pointwise_fn(self):
+        # generate() is elementwise in the band vector and ignores the
+        # region — fusable as-is (ndvi etc. keep row/col shape)
+        return functools.partial(self.generate, None)
 
 
 def ndvi(red_band: int = 0, nir_band: int = 3) -> BandMath:

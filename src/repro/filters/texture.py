@@ -12,6 +12,8 @@ the (H, W, Q²) intermediate.
 """
 from __future__ import annotations
 
+from typing import Optional
+
 import jax.numpy as jnp
 import numpy as np
 
@@ -89,7 +91,11 @@ def features_from_glcm(glcm: jnp.ndarray) -> jnp.ndarray:
 
 
 class HaralickTextures(Filter):
-    """5-band Haralick features from the first band of the input."""
+    """5-band Haralick features from the first band of the input.
+
+    ``use_pallas`` is tri-state (see ``kernels.ops.resolve_use_pallas``):
+    True forces the Pallas kernel (interpret mode on CPU), False forces the
+    jnp reference, None defers to ``REPRO_USE_PALLAS`` / the backend."""
 
     cost_per_pixel = 64.0
 
@@ -100,7 +106,7 @@ class HaralickTextures(Filter):
         levels: int = 8,
         vmin: float = 0.0,
         vmax: float = 4096.0,
-        use_pallas: bool = False,
+        use_pallas: Optional[bool] = None,
         name=None,
     ):
         super().__init__(name)
@@ -121,13 +127,35 @@ class HaralickTextures(Filter):
         return (out_region.pad(self.halo),)
 
     def generate(self, out_region: ImageRegion, x: jnp.ndarray) -> jnp.ndarray:
-        band = x[..., 0].astype(jnp.float32)
-        if self.use_pallas:
-            from repro.kernels import glcm as glcm_kernel
+        from repro.kernels import ops  # deferred: kernels.ref imports filters
 
-            return glcm_kernel.glcm_features(
-                band, self.radius, self.offset, self.levels, self.vmin, self.vmax
-            )
-        return glcm_features_ref(
-            band, self.radius, self.offset, self.levels, self.vmin, self.vmax
+        band = x[..., 0].astype(jnp.float32)
+        return ops.glcm_features(
+            band, self.radius, self.offset, self.levels, self.vmin, self.vmax,
+            use_pallas=self.use_pallas,
         )
+
+    # -- plan-layer Pallas fast path -----------------------------------------
+    def pallas_plan(self) -> bool:
+        from repro.kernels import ops
+
+        return ops.resolve_use_pallas(self.use_pallas)
+
+    def pallas_body(self, pre_fns=(None,)):
+        from repro.kernels import glcm as glcm_kernel
+
+        chain = pre_fns[0]
+        if chain is None:
+            def pre(t):
+                return t[..., 0].astype(jnp.float32)
+        else:
+            def pre(t):
+                return chain(t)[..., 0].astype(jnp.float32)
+
+        def body(x):
+            return glcm_kernel.glcm_features(
+                x, self.radius, self.offset, self.levels, self.vmin,
+                self.vmax, pre_fn=pre,
+            )
+
+        return body

@@ -33,12 +33,22 @@ from repro.kernels.util import (
 )
 
 
-def _glcm_kernel(q_ref, out_ref, *, radius, offset, levels, tile):
+def _glcm_kernel(x_ref, out_ref, *, radius, offset, levels, vmin, vmax,
+                 tile, pre_fn):
     th, tw = tile
     dr, dc = offset
     m = max(abs(dr), abs(dc))
     halo = radius + m
-    q = q_ref[0]  # (th + 2·halo, tw + 2·halo) int32
+    x = x_ref[0]  # raw (th + 2·halo, tw + 2·halo[, B]) tile
+    # fused pre-stage: the upstream pointwise chain (and band selection)
+    # runs on the VMEM tile, then quantization — all inside the kernel, so
+    # neither the chain's intermediates nor the int32 levels ever hit HBM
+    band = (pre_fn(x) if pre_fn is not None else x).astype(jnp.float32)
+    q = jnp.clip(
+        jnp.floor((band - vmin) / max(1e-12, vmax - vmin) * levels),
+        0,
+        levels - 1,
+    ).astype(jnp.int32)
 
     nbins = levels * levels
     acc = jnp.zeros((th, tw, nbins), jnp.float32)
@@ -73,7 +83,10 @@ def _glcm_kernel(q_ref, out_ref, *, radius, offset, levels, tile):
 
 @functools.partial(
     jax.jit,
-    static_argnames=("radius", "offset", "levels", "vmin", "vmax", "tile", "interpret"),
+    static_argnames=(
+        "radius", "offset", "levels", "vmin", "vmax", "tile", "interpret",
+        "pre_fn",
+    ),
 )
 def glcm_features(
     band: jnp.ndarray,
@@ -84,40 +97,45 @@ def glcm_features(
     vmax: float = 4096.0,
     tile: Tuple[int, int] = (128, 128),
     interpret: Optional[bool] = None,
+    pre_fn=None,
 ) -> jnp.ndarray:
     """band: (H + 2·halo, W + 2·halo) float — pre-padded by halo = radius +
-    max|offset| (the filter's requested region).  Returns (H, W, 5)."""
+    max|offset| (the filter's requested region).  Returns (H, W, 5).
+
+    With ``pre_fn`` (the plan layer's fused pointwise chain, a static
+    argument), ``band`` is instead the *raw* upstream array
+    (H + 2·halo, W + 2·halo, ...) and ``pre_fn`` maps its haloed tiles to
+    the 2-D float band inside the kernel.  Quantization always runs in the
+    kernel, so the int32 level image never materializes in HBM."""
     if interpret is None:
         interpret = interpret_default()
     dr, dc = offset
     halo = radius + max(abs(dr), abs(dc))
     H, W = band.shape[0] - 2 * halo, band.shape[1] - 2 * halo
-    q = jnp.clip(
-        jnp.floor((band.astype(jnp.float32) - vmin) / max(1e-12, vmax - vmin) * levels),
-        0,
-        levels - 1,
-    ).astype(jnp.int32)
-    # tile the padded image; edge-pad ragged tiles (cropped after)
+    # tile the padded image; edge-pad ragged tiles (cropped after — edge
+    # padding commutes with the kernel's pointwise pre-stage)
     th = min(tile[0], max(8, H))
     tw = min(tile[1], max(8, W))
     Hp = -(-H // th) * th
     Wp = -(-W // tw) * tw
-    qfull = jnp.pad(q, [(0, Hp - H), (0, Wp - W)], mode="edge")
-    patches = extract_patches(qfull, (th, tw), halo)  # (ntr, ntc, th+2h, tw+2h)
+    extra = band.shape[2:]
+    xfull = jnp.pad(
+        band, [(0, Hp - H), (0, Wp - W)] + [(0, 0)] * len(extra), mode="edge"
+    )
+    patches = extract_patches(xfull, (th, tw), halo)
     ntr, ntc = patches.shape[:2]
-    patches = patches.reshape(ntr * ntc, th + 2 * halo, tw + 2 * halo)
+    patches = patches.reshape((ntr * ntc, th + 2 * halo, tw + 2 * halo) + extra)
 
     kernel = functools.partial(
-        _glcm_kernel, radius=radius, offset=offset, levels=levels, tile=(th, tw)
+        _glcm_kernel, radius=radius, offset=offset, levels=levels,
+        vmin=vmin, vmax=vmax, tile=(th, tw), pre_fn=pre_fn,
     )
+    blk = (1, th + 2 * halo, tw + 2 * halo) + extra
+    nd = len(blk)
     out = pl.pallas_call(
         kernel,
         grid=(ntr * ntc,),
-        in_specs=[
-            pl.BlockSpec(
-                (1, th + 2 * halo, tw + 2 * halo), lambda i: (i, 0, 0)
-            )
-        ],
+        in_specs=[pl.BlockSpec(blk, lambda i, _n=nd: (i,) + (0,) * (_n - 1))],
         out_specs=pl.BlockSpec((1, th, tw, 5), lambda i: (i, 0, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((ntr * ntc, th, tw, 5), jnp.float32),
         interpret=interpret,

@@ -21,9 +21,13 @@ from jax.experimental import pallas as pl
 from repro.kernels.util import extract_patches, interpret_default, stitch_patches
 
 
-def _ms_kernel(x_ref, out_ref, *, hs, hr, n_iter, tile):
+def _ms_kernel(x_ref, out_ref, *, hs, hr, n_iter, tile, pre_fn):
     th, tw = tile
-    x = x_ref[0].astype(jnp.float32)  # (th+2hs, tw+2hs, B)
+    x = x_ref[0]
+    if pre_fn is not None:
+        # fused upstream pointwise chain, applied on the VMEM tile
+        x = pre_fn(x)
+    x = x.astype(jnp.float32)  # (th+2hs, tw+2hs, B)
     B = x.shape[-1]
     v = jax.lax.dynamic_slice(x, (hs, hs, 0), (th, tw, B))
     hr2 = hr * hr
@@ -41,7 +45,9 @@ def _ms_kernel(x_ref, out_ref, *, hs, hr, n_iter, tile):
     out_ref[0] = v
 
 
-@functools.partial(jax.jit, static_argnames=("hs", "hr", "n_iter", "tile", "interpret"))
+@functools.partial(
+    jax.jit, static_argnames=("hs", "hr", "n_iter", "tile", "interpret", "pre_fn")
+)
 def meanshift(
     x: jnp.ndarray,
     hs: int = 3,
@@ -49,25 +55,37 @@ def meanshift(
     n_iter: int = 4,
     tile: Tuple[int, int] = (128, 128),
     interpret: Optional[bool] = None,
+    pre_fn=None,
 ) -> jnp.ndarray:
-    """x: (H + 2hs, W + 2hs, B) pre-padded → (H, W, B)."""
+    """x: (H + 2hs, W + 2hs, Bin) pre-padded → (H, W, B).
+
+    ``pre_fn`` (static) is the plan layer's fused pointwise chain, applied
+    to the raw haloed tiles inside the kernel; B = Bin without it."""
     if interpret is None:
         interpret = interpret_default()
-    H, W, B = x.shape[0] - 2 * hs, x.shape[1] - 2 * hs, x.shape[2]
+    H, W, Bin = x.shape[0] - 2 * hs, x.shape[1] - 2 * hs, x.shape[2]
+    if pre_fn is not None:
+        B = jax.eval_shape(
+            pre_fn, jax.ShapeDtypeStruct(x.shape, x.dtype)
+        ).shape[-1]
+    else:
+        B = Bin
     th = min(tile[0], max(8, H))
     tw = min(tile[1], max(8, W))
     Hp, Wp = -(-H // th) * th, -(-W // tw) * tw
     xp = jnp.pad(x, [(0, Hp - H), (0, Wp - W), (0, 0)], mode="edge")
     tiles = extract_patches(xp, (th, tw), hs)
     ntr, ntc = tiles.shape[:2]
-    tiles = tiles.reshape(ntr * ntc, th + 2 * hs, tw + 2 * hs, B)
+    tiles = tiles.reshape(ntr * ntc, th + 2 * hs, tw + 2 * hs, Bin)
 
-    kernel = functools.partial(_ms_kernel, hs=hs, hr=hr, n_iter=n_iter, tile=(th, tw))
+    kernel = functools.partial(
+        _ms_kernel, hs=hs, hr=hr, n_iter=n_iter, tile=(th, tw), pre_fn=pre_fn
+    )
     out = pl.pallas_call(
         kernel,
         grid=(ntr * ntc,),
         in_specs=[
-            pl.BlockSpec((1, th + 2 * hs, tw + 2 * hs, B), lambda i: (i, 0, 0, 0))
+            pl.BlockSpec((1, th + 2 * hs, tw + 2 * hs, Bin), lambda i: (i, 0, 0, 0))
         ],
         out_specs=pl.BlockSpec((1, th, tw, B), lambda i: (i, 0, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((ntr * ntc, th, tw, B), jnp.float32),

@@ -1,7 +1,25 @@
-"""Jit'd dispatch wrappers: Pallas kernel on TPU, pure-jnp oracle otherwise
-(or force with ``use_pallas=True`` → interpret mode on CPU)."""
+"""Jit'd dispatch wrappers: Pallas kernel or pure-jnp oracle, per flag.
+
+Flag resolution (:func:`resolve_use_pallas`), in priority order:
+
+  1. explicit ``use_pallas=True`` / ``False`` always wins.  ``True`` on a
+     CPU host deterministically selects Pallas **interpret** mode (every
+     kernel defaults ``interpret=None`` → ``interpret_default()``, which is
+     true off-TPU) — never a silent jnp fallback, so CI exercises the real
+     kernel code path on CPU runners.
+  2. ``use_pallas=None`` consults the ``REPRO_USE_PALLAS`` env var
+     (``1/true/yes/on`` or ``0/false/no/off``) — one switch flips a whole
+     process (all filters, all executors) without threading the flag.
+  3. unset env falls back to the backend default: Pallas on TPU, the jnp
+     reference elsewhere.
+
+The plan layer's Pallas fast path (``ProcessObject.pallas_plan``) resolves
+through the same function, so the fused-kernel decision recorded in a plan
+signature and the per-call dispatch below can never disagree.
+"""
 from __future__ import annotations
 
+import os
 from typing import Optional
 
 import jax
@@ -14,11 +32,29 @@ from repro.kernels import pansharpen as _ps
 from repro.kernels import ssd_scan as _ssd
 from repro.kernels import ref as _ref
 
+_TRUTHY = ("1", "true", "yes", "on")
+_FALSY = ("0", "false", "no", "off")
 
-def _use_pallas(flag: Optional[bool]) -> bool:
+
+def resolve_use_pallas(flag: Optional[bool]) -> bool:
+    """Resolve a tri-state ``use_pallas`` flag (see module docstring)."""
     if flag is not None:
-        return flag
+        return bool(flag)
+    env = os.environ.get("REPRO_USE_PALLAS", "").strip().lower()
+    if env in _TRUTHY:
+        return True
+    if env in _FALSY:
+        return False
+    if env:
+        raise ValueError(
+            f"REPRO_USE_PALLAS={env!r}: expected one of "
+            f"{_TRUTHY + _FALSY} (or unset)"
+        )
     return jax.default_backend() == "tpu"
+
+
+# internal alias kept for callers of the original private name
+_use_pallas = resolve_use_pallas
 
 
 def glcm_features(band, radius=2, offset=(0, 1), levels=8, vmin=0.0,

@@ -9,6 +9,12 @@ layer: whichever executor is picked (streaming, thread pool, shard_map SPMD),
 compiled plans come from one shared registry, so P1–P7 run on any engine —
 and switching engines on matching geometry is a registry hit, not a
 recompile.
+
+``use_pallas`` on the kernel-backed builders (P2/P3/P5, ``chain_stages``) is
+tri-state: ``True`` puts the plan on the fused Pallas fast path (interpret
+mode off-TPU), ``False`` forces the jnp reference, and the default ``None``
+defers to ``REPRO_USE_PALLAS`` / the backend
+(:func:`repro.kernels.ops.resolve_use_pallas`).
 """
 from __future__ import annotations
 
@@ -38,7 +44,7 @@ def _mapper(factory: Optional[Callable[[], Mapper]]) -> Mapper:
 def p1_orthorectification(
     src: Source, model: Optional[SensorModel] = None,
     out_rows: Optional[int] = None, out_cols: Optional[int] = None,
-    mapper_factory=None, use_pallas: bool = False,
+    mapper_factory=None, use_pallas: Optional[bool] = None,
 ) -> Tuple[Pipeline, Mapper]:
     p = Pipeline()
     s = p.add(src)
@@ -52,7 +58,7 @@ def p1_orthorectification(
     return p, m
 
 
-def p2_textures(src: Source, mapper_factory=None, use_pallas: bool = False,
+def p2_textures(src: Source, mapper_factory=None, use_pallas: Optional[bool] = None,
                 radius: int = 2, levels: int = 8) -> Tuple[Pipeline, Mapper]:
     p = Pipeline()
     s = p.add(src)
@@ -62,7 +68,7 @@ def p2_textures(src: Source, mapper_factory=None, use_pallas: bool = False,
 
 
 def p3_pansharpening(xs: Source, pan: Source, ratio: int = 4,
-                     mapper_factory=None, use_pallas: bool = False) -> Tuple[Pipeline, Mapper]:
+                     mapper_factory=None, use_pallas: Optional[bool] = None) -> Tuple[Pipeline, Mapper]:
     p = Pipeline()
     sxs = p.add(xs)
     span = p.add(pan)
@@ -99,7 +105,7 @@ def p4_classification(src: Source, n_classes: int = 4, n_train: int = 2000,
     return p, m
 
 
-def p5_meanshift(src: Source, mapper_factory=None, use_pallas: bool = False,
+def p5_meanshift(src: Source, mapper_factory=None, use_pallas: Optional[bool] = None,
                  hs: int = 3, hr: float = 120.0, n_iter: int = 4) -> Tuple[Pipeline, Mapper]:
     p = Pipeline()
     s = p.add(src)
@@ -141,7 +147,7 @@ def chain_stages(
     texture_radius: int = 2,
     levels: int = 8,
     n_classes: int = 4,
-    use_pallas: bool = False,
+    use_pallas: Optional[bool] = None,
 ):
     """Stage list for the ROADMAP chain pansharpen → texture → classify.
 

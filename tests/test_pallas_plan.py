@@ -1,0 +1,248 @@
+"""Plan-layer Pallas fast path: flag resolution, fusion decisions, equivalence.
+
+The contract under test (see ``Pipeline._plan_walk`` and
+``ProcessObject.pallas_plan/pallas_body/pointwise_fn``):
+
+  * ``use_pallas`` is tri-state — explicit True/False wins (True on CPU
+    deterministically selects interpret mode), ``None`` defers to the
+    ``REPRO_USE_PALLAS`` env var, and with neither set the backend decides;
+  * a Pallas-planned node absorbs single-consumer pointwise chains above it
+    (Convert, BandMath) into the kernel's ``pre_fn`` — one fused Pallas call
+    per strip instead of N jnp passes — and the fusion decision is encoded in
+    the plan signature (``("pallas", …, fused)``), so fused, unfused-pallas
+    and jnp plans never collide in the registry;
+  * refusals are structural and deterministic: no ``pointwise_fn``, multiple
+    inputs, multiple consumers, persistent/origin-aware nodes, grid changes
+    (Resample) and non-identity requested regions all stop the chain;
+  * unfused pallas outputs match the jnp oracle bit-exactly for
+    pansharpen/mean-shift and within a documented tolerance for GLCM
+    (float32 quantize-boundary sensitivity; see ``TOL``); fused chains add
+    ~1 ulp per folded op (FMA contraction inside the kernel vs per-op
+    dispatch) and are held to a tight allclose instead.
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro import pipelines as PP
+from repro.core import Pipeline, PlanCache, StreamingExecutor, StripeSplitter
+from repro.core.region import ImageRegion
+from repro.filters import MeanShift
+from repro.filters.pointwise import BandMath, Concat, Convert
+from repro.kernels import ops
+from repro.raster import MemoryMapper, SyntheticScene, make_spot6_pair
+
+#: documented per-kernel pallas-vs-jnp tolerances (None = bit-exact).
+#: GLCM quantizes in float32 inside the kernel; accumulation-order and FMA
+#: differences can flip a pixel across a bin boundary, shifting normalized
+#: co-occurrence features by O(1/count) — hence the loose atol.  Pansharpen
+#: and mean-shift run the same op sequence as the jnp reference.
+TOL = {"P2": dict(rtol=1e-3, atol=1e-2), "P3": None, "P5": dict(rtol=1e-4, atol=1e-2)}
+
+
+def _assert_close(name, got, want):
+    tol = TOL.get(name)
+    if tol is None:
+        np.testing.assert_array_equal(got, want, err_msg=name)
+    else:
+        np.testing.assert_allclose(
+            got.astype(np.float64), want.astype(np.float64), err_msg=name, **tol
+        )
+
+
+# -- flag resolution ---------------------------------------------------------
+def test_resolve_explicit_flag_wins(monkeypatch):
+    monkeypatch.setenv("REPRO_USE_PALLAS", "1")
+    assert ops.resolve_use_pallas(False) is False
+    monkeypatch.setenv("REPRO_USE_PALLAS", "0")
+    assert ops.resolve_use_pallas(True) is True
+
+
+@pytest.mark.parametrize("val,expect", [
+    ("1", True), ("true", True), ("YES", True), ("on", True),
+    ("0", False), ("false", False), ("No", False), ("off", False),
+    (" 1 ", True),
+])
+def test_resolve_env_default(monkeypatch, val, expect):
+    monkeypatch.setenv("REPRO_USE_PALLAS", val)
+    assert ops.resolve_use_pallas(None) is expect
+
+
+def test_resolve_env_garbage_raises(monkeypatch):
+    monkeypatch.setenv("REPRO_USE_PALLAS", "maybe")
+    with pytest.raises(ValueError, match="REPRO_USE_PALLAS"):
+        ops.resolve_use_pallas(None)
+
+
+def test_resolve_unset_follows_backend(monkeypatch):
+    import jax
+
+    monkeypatch.delenv("REPRO_USE_PALLAS", raising=False)
+    assert ops.resolve_use_pallas(None) is (jax.default_backend() == "tpu")
+
+
+def test_env_var_reaches_plan_layer(subproc):
+    """REPRO_USE_PALLAS=1 with use_pallas=None puts P5 on the pallas plan."""
+    code = r"""
+import numpy as np
+from repro import pipelines as PP
+from repro.core.region import ImageRegion
+from repro.raster import SyntheticScene
+
+p, m = PP.p5_meanshift(SyntheticScene(24, 16, bands=3, dtype=np.float32),
+                       hs=2, n_iter=1)
+desc = p.describe_pull(m, ImageRegion((0, 0), (24, 16)))
+assert desc.pallas_nodes, "env var did not select the pallas plan"
+print("ENV_PLAN_OK")
+"""
+    env = dict(os.environ)
+    env["REPRO_USE_PALLAS"] = "1"
+    env["PYTHONPATH"] = os.path.join(
+        os.path.dirname(os.path.dirname(__file__)), "src"
+    ) + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                          text=True, timeout=600, env=env)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "ENV_PLAN_OK" in proc.stdout
+
+
+# -- fusion decisions --------------------------------------------------------
+def _desc(p, m):
+    info = p.info(m)
+    return p.describe_pull(m, ImageRegion((0, 0), (info.rows, info.cols)))
+
+
+def _chain_pipeline(use_pallas, n_chain=2):
+    """SyntheticScene → Convert → BandMath → MeanShift → mapper."""
+    p = Pipeline()
+    s = p.add(SyntheticScene(48, 32, bands=3, dtype=np.float32, seed=3))
+    up = s
+    if n_chain >= 1:
+        up = p.add(Convert(np.float32, in_range=(0.0, 4096.0),
+                           out_range=(0.0, 255.0)), [up])
+    if n_chain >= 2:
+        up = p.add(BandMath(lambda x: x * 0.5 + 1.0, out_bands=3), [up])
+    f = p.add(MeanShift(hs=2, hr=60.0, n_iter=2, use_pallas=use_pallas), [up])
+    m = p.add(MemoryMapper(), [f])
+    return p, m, f
+
+
+def test_pointwise_chain_fuses():
+    p, m, f = _chain_pipeline(True)
+    desc = _desc(p, m)
+    assert desc.pallas_nodes == (f._serial,)
+    assert len(desc.fused_nodes) == 2  # Convert + BandMath folded in
+
+
+def test_fusion_absent_on_jnp_plan():
+    p, m, _ = _chain_pipeline(False)
+    desc = _desc(p, m)
+    assert desc.pallas_nodes == ()
+    assert desc.fused_nodes == ()
+
+
+def test_fused_and_unfused_signatures_distinct():
+    sigs = set()
+    for use_pallas, n_chain in [(True, 2), (True, 0), (False, 2)]:
+        p, m, _ = _chain_pipeline(use_pallas, n_chain)
+        sigs.add(_desc(p, m).signature)
+    assert len(sigs) == 3  # fused-pallas, bare-pallas, jnp never collide
+
+
+def test_multi_consumer_refuses_fusion():
+    """A pointwise node feeding two consumers must not be absorbed (its other
+    consumer still needs the materialized output)."""
+    p = Pipeline()
+    s = p.add(SyntheticScene(48, 32, bands=3, dtype=np.float32))
+    c = p.add(Convert(np.float32, in_range=(0.0, 4096.0),
+                      out_range=(0.0, 255.0)), [s])
+    f1 = p.add(MeanShift(hs=2, hr=60.0, n_iter=1, use_pallas=True), [c])
+    f2 = p.add(MeanShift(hs=2, hr=90.0, n_iter=1, use_pallas=True), [c])
+    cat = p.add(Concat(2), [f1, f2])
+    m = p.add(MemoryMapper(), [cat])
+    desc = _desc(p, m)
+    assert set(desc.pallas_nodes) == {f1._serial, f2._serial}
+    assert desc.fused_nodes == ()  # Convert kept: two consumers
+
+
+def test_resample_refuses_fusion():
+    """P3's Resample changes the grid (and has no pointwise_fn): the fuse
+    kernel plans as pallas but absorbs nothing."""
+    p, m = PP.p3_pansharpening(*make_spot6_pair(24, 16), use_pallas=True)
+    desc = _desc(p, m)
+    assert len(desc.pallas_nodes) == 1
+    assert desc.fused_nodes == ()
+
+
+def test_persistent_node_refuses_fusion():
+    """A persistent pass-through above the kernel must stay materialized —
+    its accumulate hook observes the real region stream."""
+    from repro.filters import BandStatistics
+
+    p = Pipeline()
+    s = p.add(SyntheticScene(48, 32, bands=3, dtype=np.float32))
+    st = p.add(BandStatistics(bands=3), [s])
+    f = p.add(MeanShift(hs=2, hr=60.0, n_iter=1, use_pallas=True), [st])
+    m = p.add(MemoryMapper(), [f])
+    desc = _desc(p, m)
+    assert desc.pallas_nodes == (f._serial,)
+    assert desc.fused_nodes == ()
+
+
+# -- equivalence + registry behavior -----------------------------------------
+def _run(p, m, cache=None, n_splits=4):
+    cache = cache if cache is not None else PlanCache()
+    StreamingExecutor(
+        p, m, StripeSplitter(n_splits=n_splits), plan_cache=cache, prefetch=0
+    ).run()
+    return np.array(m.result), cache
+
+
+def test_fused_chain_matches_jnp():
+    """Fusing the pointwise chain into the kernel contracts its mul+add
+    sequences into FMAs that the per-op jnp dispatch doesn't — same math,
+    ~1 ulp per op, so allclose rather than array_equal (the documented
+    fused-chain tolerance)."""
+    ref, _ = _run(*_chain_pipeline(False)[:2])
+    out, cache = _run(*_chain_pipeline(True)[:2])
+    np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-3)
+    assert cache.stats.compiles == 1  # virtual borders: one fused signature
+
+
+def test_interpret_mode_deterministic_on_cpu():
+    """use_pallas=True off-TPU runs the kernels in interpret mode — same
+    bits on every run."""
+    a, _ = _run(*_chain_pipeline(True)[:2])
+    b, _ = _run(*_chain_pipeline(True)[:2])
+    np.testing.assert_array_equal(a, b)
+
+
+def test_warm_registry_zero_new_lowers():
+    p, m, _ = _chain_pipeline(True)
+    _, cache = _run(p, m)
+    lowers0, compiles0 = cache.stats.lowers, cache.stats.compiles
+    _run(p, m, cache=cache)
+    assert cache.stats.lowers == lowers0
+    assert cache.stats.compiles == compiles0
+    assert cache.stats.hits >= 4
+
+
+@pytest.mark.parametrize("name", ["P2", "P3", "P5"])
+def test_pallas_kernels_match_jnp_oracle(name):
+    builds = {
+        "P2": lambda up: PP.p2_textures(
+            SyntheticScene(48, 32, bands=4, dtype=np.float32),
+            use_pallas=up, radius=2, levels=4),
+        "P3": lambda up: PP.p3_pansharpening(*make_spot6_pair(24, 16),
+                                             use_pallas=up),
+        "P5": lambda up: PP.p5_meanshift(
+            SyntheticScene(48, 32, bands=4, dtype=np.float32),
+            use_pallas=up, hs=2, n_iter=2),
+    }
+    ref, _ = _run(*builds[name](False))
+    out, cache = _run(*builds[name](True))
+    _assert_close(name, out, ref)
+    assert cache.stats.compiles == 1  # one fused signature per striped run
