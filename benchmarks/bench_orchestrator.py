@@ -119,19 +119,25 @@ def run(quick: bool = False) -> List:
                 float(capacity)))
 
     # acceptance gates (ISSUE 6): pipelining beats the barrier sum by >=25%
-    # while never holding more than queue_capacity strips per edge in flight
+    # while never holding more than queue_capacity strips per edge in flight.
+    # A failed gate still hands the harness the rows measured so far.
+    def _fail(msg):
+        err = AssertionError(msg)
+        err.partial_rows = list(out)
+        raise err
+
     if ratio >= 0.75:
-        raise AssertionError(
+        _fail(
             f"pipelined/barrier ratio {ratio:.3f} >= 0.75 "
             f"(barrier {t_barrier:.3f}s, pipelined {t_pipe:.3f}s)"
         )
     if max_in_flight > capacity:
-        raise AssertionError(
+        _fail(
             f"max_in_flight {max_in_flight} exceeded queue_capacity "
             f"{capacity} (stats: {stats})"
         )
     if overdrafts:
-        raise AssertionError(
+        _fail(
             f"zero-halo in-order chain must never overdraft; got {overdrafts}"
         )
 

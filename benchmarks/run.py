@@ -17,7 +17,10 @@ CI uploads one per run so the perf trajectory accumulates comparable
 points across PRs.
 
 A benchmark that raises makes the harness exit non-zero (the CI smoke job
-depends on this — a silently-skipped bench reads as "passed").  An unknown
+depends on this — a silently-skipped bench reads as "passed"), but the rows
+it measured before failing are still printed and snapshotted when the
+exception carries them as ``partial_rows`` — a late gate failure must not
+discard the section's data points.  An unknown
 ``--only`` section name exits non-zero listing the valid names (with a
 did-you-mean hint for near-misses).  The only tolerated skip is the
 roofline section, which needs dry-run artifacts that a fresh checkout has
@@ -46,6 +49,10 @@ SECTIONS = {
         lambda mod, args: mod.run(quick=args.quick),
     ),
     "kernels": ("benchmarks.bench_kernels", lambda mod, args: mod.run()),
+    "serving": (
+        "benchmarks.bench_serving",
+        lambda mod, args: mod.run(quick=args.quick),
+    ),
     "roofline": ("benchmarks.bench_roofline", lambda mod, args: mod.run()),
 }
 
@@ -63,6 +70,12 @@ _SNAPSHOT_METRICS = {
     "kernel_fused_chain_mpix_s": ("kernel_fused_chain_pallas_256", "derived"),
     "kernel_fused_over_jnp": ("kernel_fused_speedup", "derived"),
     "kernel_meanshift_roofline_fraction": ("kernel_meanshift_roofline", "derived"),
+    # PR 8 plan-warm tile serving: batched-storm p99 latency + throughput,
+    # engine speedup over per-tile pulls, and the zero-lowers warm-up proof
+    "serving_p99_batched_us": ("serving_storm_batched_p99", "us_per_call"),
+    "serving_tiles_per_sec": ("serving_storm_batched", "derived"),
+    "serving_batched_speedup": ("serving_batched_speedup", "derived"),
+    "serving_post_warm_lowers": ("serving_first_request_lowers", "derived"),
 }
 
 
@@ -130,6 +143,10 @@ def main(argv=None) -> int:
                 print(f"# roofline skipped: {e}", file=sys.stderr)
                 continue
             traceback.print_exc()
+            # a gated bench that fails late attaches everything it measured
+            # before the gate as ``partial_rows`` — harvest them so the CSV
+            # and the JSON snapshot still carry the section's data points
+            rows += list(getattr(e, "partial_rows", ()) or ())
             failures.append((name, e))
 
     print("name,us_per_call,derived")

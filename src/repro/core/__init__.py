@@ -48,6 +48,7 @@ from repro.core.dag import (
     UpstreamFailed,
 )
 from repro.core.streaming import (
+    BatchedRegionPuller,
     StreamingExecutor,
     StreamResult,
     execute,
@@ -98,6 +99,7 @@ __all__ = [
     "PlanCache",
     "PlanDescription",
     "global_plan_cache",
+    "BatchedRegionPuller",
     "StreamingExecutor",
     "StreamResult",
     "execute",

@@ -51,6 +51,29 @@ Plan lifecycle — every executor follows the same five steps::
       PullPlan.canonical_fn     pre_fns applied on VMEM tiles in-kernel
                                 fn(arrays, pstates, origins) → jit + register
 
+Serving request path — the tile-serving front end (:mod:`repro.serve.tiles`)
+rides the same lifecycle, one extra registry hop deep::
+
+      TileRequest (pipeline, zoom, x, y)
+            │ admission         serve.admission — bounded queue depth,
+            ▼                   shed-or-block policy
+      (node, tile region)       TileGrid.region(x, y)
+            │ describe          the SAME describe pass as above — the
+            ▼                   plan signature IS the batch key
+      signature group           concurrent requests with equal signatures
+            │ batch             coalesce into ONE invocation: arrays and
+            ▼                   origin scalars stack along a leading tile
+      batched program           axis, jax.vmap(canonical_fn) jits under
+            │                   ("serve_batched", signature, bucket) via
+            ▼                   get_or_build — post warm-up every hop is
+      (tiles, no new traces)    a registry hit: zero lowers, zero compiles
+
+:meth:`PlanCache.warm` is the warm-up protocol: describe a geometry sweep,
+lower every distinct signature, and (``execute=True``) run each entry once so
+XLA traces before the first live request.  :meth:`PlanCache.stats_snapshot`
+freezes the counters as a plain dict — the serving metrics and the perf
+benches diff two snapshots instead of reaching into live counters.
+
 Windowed reads make this lifecycle *total* over P1–P7: a warp's drifting
 request is classified at describe time as a conservative static bounding
 window (rows anchored at the request origin, columns shifted in-image), so
@@ -106,6 +129,19 @@ class CacheStats:
     misses: int = 0
     evictions: int = 0
     lowers: int = 0
+
+    def snapshot(self) -> Dict[str, int]:
+        """The counters frozen as a plain dict — the live object keeps
+        counting, the snapshot does not.  Consumers that need a before/after
+        delta (serving metrics, bench gates) diff two snapshots instead of
+        caching references into live counters."""
+        return {
+            "compiles": self.compiles,
+            "hits": self.hits,
+            "misses": self.misses,
+            "evictions": self.evictions,
+            "lowers": self.lowers,
+        }
 
 
 def read_plan_sources(reads, windows) -> List:
@@ -321,6 +357,45 @@ class PlanCache:
             entry = _CompiledEntry(plan.canonical_fn, self.stats)
             self._store(key, entry)
             return entry
+
+    def stats_snapshot(self) -> Dict[str, int]:
+        """The registry counters as a plain dict (see
+        :meth:`CacheStats.snapshot`).  This is the supported way to read the
+        counters for metrics/benchmarks — ``StreamResult.cache_snapshot`` and
+        the serving engine's ``metrics()`` both surface exactly this."""
+        return self.stats.snapshot()
+
+    def warm(
+        self,
+        pipeline,
+        node,
+        regions,
+        virtual: bool = False,
+        execute: bool = True,
+    ) -> int:
+        """Warm-up protocol: describe every region of a geometry sweep, lower
+        each *distinct* signature into the registry, and (``execute=True``)
+        run each entry once so XLA traces now rather than on the first live
+        request.  Returns the number of distinct signatures ensured.
+
+        ``pipeline``/``node`` follow the ``Pipeline.describe_pull`` protocol;
+        ``virtual`` selects the virtually row-padded describe walk (callers
+        should pass the same mode their serving/streaming path will use, or
+        the warmed signatures won't be the ones the live path looks up).
+        """
+        seen = set()
+        for region in regions:
+            desc = pipeline.describe_pull(node, region, virtual=virtual)
+            if desc.signature in seen:
+                continue
+            seen.add(desc.signature)
+            entry = self.compiled_for(desc, lambda: pipeline.lower_pull(desc))
+            if execute:
+                out, _ = entry(
+                    desc.read_sources(), desc.initial_pstates(), desc.origins()
+                )
+                jax.block_until_ready(out)
+        return len(seen)
 
     def get_or_build(self, key: Tuple, build: Callable[[], object]):
         """Generic registry slot for executor-level programs (keyed by the

@@ -213,6 +213,62 @@ def chain_stages(
     ]
 
 
+def build_tile_server(
+    rows_xs: int = 32,
+    cols_xs: int = 32,
+    seed: int = 0,
+    zooms: Tuple[int, ...] = (0, 1),
+    pipelines: Tuple[str, ...] = ("P2", "P3", "P5"),
+    tile_rows: int = 16,
+    tile_cols: Optional[int] = None,
+    use_pallas: Optional[bool] = None,
+    server=None,
+    meanshift_iters: int = 2,
+    **server_kw,
+):
+    """Register the kernel-backed pipelines (P2 textures, P3 pansharpening,
+    P5 mean-shift) for tile serving across zoom levels.
+
+    Zoom ``z`` serves a ``2**z``-decimated view of the synthetic scene
+    (:class:`~repro.raster.DecimatedSource` — tile-window reads on the base,
+    never the full image); P3 keeps its 4× PAN/XS ratio at every zoom by
+    decimating both products.  Keep ``tile_rows``/``tile_cols`` multiples of
+    the resample ratio (4) so P3 tiles share tap phase — interior tiles then
+    collapse to one plan signature per zoom and batch together.
+
+    Returns the (unstarted) :class:`~repro.serve.TileServer`; callers run
+    ``server.warm()`` then either the synchronous ``serve()`` or
+    ``start()``/``submit()``.  Extra keyword arguments construct the server
+    (admission controller, batch sizes, tile cache size, ...).
+    """
+    from repro.raster.sources import DecimatedSource, SyntheticScene, make_spot6_pair
+    from repro.serve import TileServer
+
+    if server is None:
+        server = TileServer(**server_kw)
+    elif server_kw:
+        raise ValueError("pass server_kw only when the server is built here")
+    for z in zooms:
+        f = 2 ** int(z)
+
+        def _zoomed(src: Source) -> Source:
+            return src if f == 1 else DecimatedSource(src, f)
+
+        if "P2" in pipelines:
+            scene = SyntheticScene(rows_xs, cols_xs, bands=4, seed=seed, name=f"XS_z{z}")
+            p, m = p2_textures(_zoomed(scene), use_pallas=use_pallas)
+            server.register("P2", z, p, m, tile_rows, tile_cols)
+        if "P3" in pipelines:
+            xs, pan = make_spot6_pair(rows_xs, cols_xs, seed=seed)
+            p, m = p3_pansharpening(_zoomed(xs), _zoomed(pan), use_pallas=use_pallas)
+            server.register("P3", z, p, m, tile_rows, tile_cols)
+        if "P5" in pipelines:
+            scene = SyntheticScene(rows_xs, cols_xs, bands=4, seed=seed + 3, name=f"MS_z{z}")
+            p, m = p5_meanshift(_zoomed(scene), use_pallas=use_pallas, n_iter=meanshift_iters)
+            server.register("P5", z, p, m, tile_rows, tile_cols)
+    return server
+
+
 ALL = {
     "P1": p1_orthorectification,
     "P2": p2_textures,

@@ -1,11 +1,18 @@
 """Raster substrate: data model, file I/O (strip-parallel RTIF), sources, mappers."""
 from repro.raster import io
-from repro.raster.sources import ArraySource, RasterReader, SyntheticScene, make_spot6_pair
+from repro.raster.sources import (
+    ArraySource,
+    DecimatedSource,
+    RasterReader,
+    SyntheticScene,
+    make_spot6_pair,
+)
 from repro.raster.mappers import MemoryMapper, ParallelRasterWriter
 
 __all__ = [
     "io",
     "ArraySource",
+    "DecimatedSource",
     "RasterReader",
     "SyntheticScene",
     "make_spot6_pair",

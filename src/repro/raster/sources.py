@@ -117,6 +117,68 @@ class SyntheticScene(Source):
         return vals.astype(self.dtype)
 
 
+class DecimatedSource(Source):
+    """A zoom-level view of another source: every ``factor``-th pixel.
+
+    The tile-serving engine registers one pipeline per zoom; zoom ``z`` reads
+    through ``DecimatedSource(base, 2**z)``.  A requested window maps to a
+    ``factor``-scaled window on the base source (tile-window reads: only the
+    pixels under the tile are generated, never the full-resolution image),
+    then strided — a pure function of absolute coordinates whenever the base
+    is, so region decomposition still reassembles identically.
+    """
+
+    needs_origin = True
+
+    def __init__(self, base: Source, factor: int, name: Optional[str] = None):
+        if factor < 1:
+            raise ValueError(f"decimation factor must be >= 1, got {factor}")
+        super().__init__(name or f"decim{factor}:{base.name}")
+        self.base = base
+        self.factor = int(factor)
+        self.needs_origin = bool(getattr(base, "needs_origin", False))
+
+    def output_info(self) -> ImageInfo:
+        info = self.base.output_info()
+        geo = info.geo
+        scaled = GeoTransform(
+            origin_x=geo.origin_x,
+            origin_y=geo.origin_y,
+            spacing_x=geo.spacing_x * self.factor,
+            spacing_y=geo.spacing_y * self.factor,
+        )
+        return ImageInfo(
+            -(-info.rows // self.factor),
+            -(-info.cols // self.factor),
+            info.bands,
+            info.dtype,
+            scaled,
+            info.nodata,
+        )
+
+    def generate(self, out_region: ImageRegion, origin=None) -> jnp.ndarray:
+        f = self.factor
+        if origin is None:
+            origin = out_region.index
+        info = self.base.output_info()
+        r0, c0 = out_region.index[0] * f, out_region.index[1] * f
+        # clamp the scaled window to the base image (ragged last tiles when
+        # rows/cols aren't factor-multiples); the stride below still yields
+        # at least out_region.rows/cols samples, trimmed to exact size
+        base_region = ImageRegion(
+            (r0, c0),
+            (min(out_region.rows * f, info.rows - r0),
+             min(out_region.cols * f, info.cols - c0)),
+        )
+        if self.needs_origin:
+            base = self.base.generate(
+                base_region, origin=(origin[0] * f, origin[1] * f)
+            )
+        else:
+            base = self.base.generate(base_region)
+        return base[::f, ::f][: out_region.rows, : out_region.cols]
+
+
 def make_spot6_pair(rows_xs: int, cols_xs: int, seed: int = 0):
     """XS (4-band) + PAN (1-band at 4× resolution) synthetic product pair,
     mirroring Table 1 of the paper (PAN ≈ 4× XS resolution)."""

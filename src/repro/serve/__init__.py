@@ -1,3 +1,15 @@
 from repro.serve.engine import build_prefill_step, build_decode_step, ServeEngine
+from repro.serve.admission import AdmissionController, AdmissionStats, Shed
+from repro.serve.tiles import TileGrid, TileRequest, TileServer
 
-__all__ = ["build_prefill_step", "build_decode_step", "ServeEngine"]
+__all__ = [
+    "build_prefill_step",
+    "build_decode_step",
+    "ServeEngine",
+    "AdmissionController",
+    "AdmissionStats",
+    "Shed",
+    "TileGrid",
+    "TileRequest",
+    "TileServer",
+]

@@ -79,6 +79,39 @@ def test_raising_bench_exits_nonzero():
     assert "name,us_per_call,derived" in proc.stdout
 
 
+def test_failed_gate_still_snapshots_partial_rows(tmp_path):
+    """A gated bench that fails late must not lose the rows it measured: the
+    exception's ``partial_rows`` land in the CSV and the JSON snapshot, and
+    the run still exits non-zero."""
+    import json
+
+    snap_path = tmp_path / "BENCH_partial.json"
+    code = (
+        "import sys\n"
+        "from benchmarks import run\n"
+        "import types\n"
+        "mod = types.ModuleType('benchmarks.fake_gated')\n"
+        "def bench_run():\n"
+        "    rows = [('fake_measured_row', 12.5, 2.0)]\n"
+        "    err = AssertionError('gate failed after measuring')\n"
+        "    err.partial_rows = rows\n"
+        "    raise err\n"
+        "mod.run = bench_run\n"
+        "sys.modules['benchmarks.fake_gated'] = mod\n"
+        "run.SECTIONS['fakegated'] = ('benchmarks.fake_gated',\n"
+        "                             lambda m, a: m.run())\n"
+        f"sys.exit(run.main(['--only', 'fakegated', '--snapshot', {str(snap_path)!r}]))\n"
+    )
+    proc = _run(code=code)
+    assert proc.returncode == 1, (proc.stdout, proc.stderr)
+    assert "FAILED fakegated" in proc.stderr
+    assert "fake_measured_row,12.5,2.0000" in proc.stdout
+    snap = json.loads(snap_path.read_text())
+    assert snap["rows"]["fake_measured_row"] == {
+        "us_per_call": 12.5, "derived": 2.0
+    }
+
+
 def test_quick_balancing_smoke_emits_csv():
     proc = _run(argv=["--only", "balancing", "--quick"])
     assert proc.returncode == 0, (proc.stdout[-2000:], proc.stderr[-2000:])

@@ -1,0 +1,132 @@
+"""Prefetcher lifecycle hardening (the serving engine churns these).
+
+The seed Prefetcher hung forever on three paths: a finished iterator left
+consumers blocked on the queue, a raised iterator error vanished in the
+producer thread, and there was no close() at all — a producer blocked on a
+full queue leaked its thread.  These tests pin the hardened contract:
+StopIteration on exhaustion, error propagation to the consumer, idempotent
+exception-safe close() that never strands a blocked party, and the
+non-blocking poll() the tile server drains prefetches with.
+"""
+import threading
+import time
+
+import pytest
+
+from repro.data.pipeline import Prefetcher
+
+
+def test_iterates_and_stops_on_exhaustion():
+    pf = Prefetcher(iter(range(5)), depth=2)
+    assert list(pf) == [0, 1, 2, 3, 4]
+    with pytest.raises(StopIteration):
+        next(pf)  # repeated next() keeps raising, never blocks
+    pf.close()
+
+
+def test_iterator_error_propagates_to_consumer():
+    def gen():
+        yield 1
+        raise ValueError("source failed")
+
+    pf = Prefetcher(gen(), depth=2)
+    assert next(pf) == 1
+    with pytest.raises(ValueError, match="source failed"):
+        next(pf)
+    pf.close()  # close after error is still clean
+
+
+def test_close_is_idempotent_and_unblocks_full_queue_producer():
+    produced = []
+
+    def gen():
+        for i in range(10_000):
+            produced.append(i)
+            yield i
+
+    pf = Prefetcher(gen(), depth=2)
+    assert next(pf) == 0
+    # producer is now blocked on the full queue; close() must still join it
+    pf.close(timeout=5.0)
+    assert not pf.t.is_alive()
+    assert len(produced) < 10_000  # it stopped early rather than draining
+    pf.close()  # second close is a no-op
+    with pytest.raises(StopIteration):
+        next(pf)
+
+
+def test_close_wakes_consumer_blocked_on_empty_queue():
+    release = threading.Event()
+
+    def gen():
+        release.wait(timeout=10)
+        return
+        yield  # pragma: no cover — makes this a generator
+
+    pf = Prefetcher(gen(), depth=2)
+    got = []
+
+    def consume():
+        try:
+            next(pf)
+        except StopIteration:
+            got.append("stopped")
+
+    t = threading.Thread(target=consume)
+    t.start()
+    time.sleep(0.05)
+    assert t.is_alive()  # blocked waiting for an item
+    release.set()
+    pf.close(timeout=5.0)
+    t.join(timeout=5.0)
+    assert got == ["stopped"]
+
+
+def test_poll_is_nonblocking_and_preserves_items():
+    slow = threading.Event()
+
+    def gen():
+        yield "a"
+        slow.wait(timeout=10)
+        yield "b"
+
+    pf = Prefetcher(gen(), depth=2)
+    deadline = time.monotonic() + 5
+    first = None
+    while first is None and time.monotonic() < deadline:
+        first = pf.poll()
+    assert first == "a"
+    assert pf.poll() is None  # nothing ready — returns, does not block
+    slow.set()
+    second = None
+    deadline = time.monotonic() + 5
+    while second is None and time.monotonic() < deadline:
+        second = pf.poll()
+    assert second == "b"
+    assert pf.poll() is None  # exhausted: keeps returning None
+    pf.close()
+    assert pf.poll() is None  # closed: still None, never raises
+
+
+def test_two_consumers_both_wake_on_exhaustion():
+    pf = Prefetcher(iter([1]), depth=2)
+    results = []
+
+    def consume():
+        out = []
+        while True:
+            try:
+                out.append(next(pf))
+            except StopIteration:
+                break
+        results.append(out)
+
+    threads = [threading.Thread(target=consume) for _ in range(2)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=5.0)
+        assert not t.is_alive()
+    assert len(results) == 2  # both consumers woke with StopIteration
+    assert sum(results, []).count(1) == 1  # the item is delivered once
+    pf.close()
