@@ -97,6 +97,53 @@ def _plan_layer_microbench(out: List, quick: bool) -> None:
               f"({dt_describe*1e6:.1f}us vs {dt_lower*1e6:.1f}us)", file=sys.stderr)
 
 
+def _tile_grid_bench(out: List, tmp: Path, quick: bool) -> None:
+    """1-D strips vs the 2-D tile grid on a WIDE image (PR 9).
+
+    An nr·nc-way strip split of a wide image yields long skinny stripes
+    whose halo rows span the full width; the matching nr×nc tile grid
+    (``padded_tile_grid``) keeps regions square-ish, so the halo perimeter
+    per pixel shrinks.  Streaming over the Hr×Wc tile geometry is the
+    single-process analogue of the 2-D SPMD mesh — and must still be ONE
+    compile: grid-mode virtual describes give every tile (ragged columns
+    included) the shared interior signature.  Derived columns: regions/sec
+    for the strip row, strip/tile wall ratio for the tile row, registry
+    hits for the compile row."""
+    from repro.core import TileSplitter, padded_tile_grid
+
+    grows, gcols = (64, 512) if quick else (96, 768)
+    gnr, gnc = 2, 4
+
+    def build(tag):
+        src = SyntheticScene(grows, gcols, bands=4, dtype=np.float32)
+        return PP.p2_textures(
+            src,
+            mapper_factory=lambda: ParallelRasterWriter(str(tmp / f"{tag}.rtif")),
+        )
+
+    p, m = build("grid_strips")
+    dt_strips, res = _timed(
+        StreamingExecutor(p, m, StripeSplitter(n_splits=gnr * gnc),
+                          plan_cache=PlanCache(), prefetch=0)
+    )
+    out.append(("streaming_grid_strips_1d", dt_strips * 1e6,
+                res.regions_processed / dt_strips))
+
+    Hr, Wc, _, _ = padded_tile_grid(grows, gcols, gnr, gnc)
+    p, m = build("grid_tiles")
+    cache = PlanCache()
+    dt_tiles, _ = _timed(
+        StreamingExecutor(p, m, TileSplitter(Hr, Wc), plan_cache=cache,
+                          prefetch=0)
+    )
+    out.append(("streaming_grid_tiles_2d", dt_tiles * 1e6, dt_strips / dt_tiles))
+    out.append(("streaming_grid_tile_compiles", float(cache.stats.compiles),
+                float(cache.stats.hits)))
+    if cache.stats.compiles != 1:
+        print(f"# WARNING: expected 1 compile on the P2 tile grid, got "
+              f"{cache.stats.compiles}", file=sys.stderr)
+
+
 def run(quick: bool = False) -> List:
     out = []
     with tempfile.TemporaryDirectory(prefix="bench_streaming_") as d:
@@ -129,6 +176,8 @@ def run(quick: bool = False) -> List:
         if cache.stats.compiles != 1:  # virtual border describes: one signature
             print(f"# WARNING: expected 1 compile on striped P2, got "
                   f"{cache.stats.compiles}", file=sys.stderr)
+
+        _tile_grid_bench(out, tmp, quick)
         if quick:
             return out
 

@@ -63,6 +63,10 @@ _SNAPSHOT_METRICS = {
     "streaming_speedup_vs_rejit": ("streaming_P2_engine_cached", "derived"),
     "streaming_async_speedup_vs_rejit": ("streaming_P2_engine_async", "derived"),
     "streaming_compile_count": ("streaming_P2_compiles", "us_per_call"),
+    # PR 9 tile-grid column: 2-D tiles vs 1-D strips on a wide image, and the
+    # one-compile proof that every tile shares the interior signature
+    "streaming_grid_tiles_over_strips": ("streaming_grid_tiles_2d", "derived"),
+    "streaming_grid_tile_compiles": ("streaming_grid_tile_compiles", "us_per_call"),
     "orchestrator_pipelined_over_barrier": ("orch_chain_pipelined", "derived"),
     "orchestrator_max_in_flight": ("orch_chain_max_in_flight", "us_per_call"),
     # PR 7 pallas fast path: fused-chain Mpixels/s, pallas-vs-jnp speedup and

@@ -29,6 +29,8 @@ from repro.core.splitting import (
     TileSplitter,
     AutoSplitter,
     VMEMTileSplitter,
+    padded_tile_grid,
+    virtual_tile_regions,
 )
 from repro.core.scheduling import (
     static_schedule,
@@ -58,7 +60,10 @@ from repro.core.orchestrator import Orchestrator, Stage, StageResult
 from repro.core.parallel import (
     ParallelExecutor,
     NotStripParallelizable,
+    NotTileParallelizable,
     build_strip_plan,
+    build_tile_plan,
+    halo_exchange_cols,
     halo_exchange_rows,
 )
 
@@ -109,6 +114,11 @@ __all__ = [
     "StageResult",
     "ParallelExecutor",
     "NotStripParallelizable",
+    "NotTileParallelizable",
     "build_strip_plan",
+    "build_tile_plan",
+    "halo_exchange_cols",
     "halo_exchange_rows",
+    "padded_tile_grid",
+    "virtual_tile_regions",
 ]

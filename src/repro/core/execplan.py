@@ -25,9 +25,15 @@ counters, see :class:`~repro.core.process_object.ProcessObject`) rather than
 ``id()`` values, so a process-wide registry can never confuse a dead
 pipeline's recycled object ids with a live one's.
 
-Plan lifecycle — every executor follows the same five steps::
+Plan lifecycle — every executor follows the same steps::
 
       (node, region)
+            │ tile-grid probe   SPMD only: build_tile_plan describes EVERY
+            ▼                   virtual tile of the nr × nc padded grid
+      virtual tile geometry     (virtual_tile_regions; 1-D strips are the
+            │                   nc = 1 column) and demands one shared
+            │                   interior signature — else
+            │                   NotTileParallelizable with diagnostics
             │ describe          Pipeline.describe_pull — one host graph walk:
             ▼                   exact requests of needs_origin nodes become
       PlanDescription           static-shape WINDOW specs (window_bound hook);
@@ -47,7 +53,7 @@ Plan lifecycle — every executor follows the same five steps::
             ▼ miss
       lower                     Pipeline.lower_pull — closure tree; pallas
             │                   steps lower to pallas_body(pre_fns): ONE
-            ▼                   fused Pallas call per strip, the chain's
+            ▼                   fused Pallas call per tile, the chain's
       PullPlan.canonical_fn     pre_fns applied on VMEM tiles in-kernel
                                 fn(arrays, pstates, origins) → jit + register
 
@@ -82,19 +88,22 @@ prefetches fixed-shape windows, and the SPMD executor lowers the same entry
 to ``lax.dynamic_slice`` of the halo-exchanged shard — one trace per
 geometry signature on every engine.
 
-Virtual padded strips make it total over *arbitrary strip geometry*: the
-describe pass can run against a virtually row-padded image
-(``describe_pull(..., virtual=True)``), in which no request ever clamps in
-the row direction, so the ragged last strip of an uneven split — and both
-border strips of an n=2 halo split — describe exactly like interior strips
-and *share the interior signature*.  The resulting :class:`PlanDescription`
-carries the pad metadata (``virtual`` flag + ``pad_rows``, the trailing
-output rows beyond the real image) OUTSIDE the signature: registry lookup
-still lands on the one interior entry, the read stage materializes the
-spilled rows by edge replication (:func:`read_plan_sources` host-side, halo
-replication of the row-padded global under SPMD), mask-aware persistent
-filters accumulate under an in-trace validity mask derived from their traced
-row origin, and the executor crops the pad rows before the write stage.
+Virtual padded tiles make it total over *arbitrary tile-grid geometry*: the
+describe pass can run against a virtually padded image
+(``describe_pull(..., virtual=True)`` — the ``"grid"`` mode, no clamping in
+either axis; ``virtual="rows"`` keeps the restricted rows-only walk for
+pipelines whose column borders are not virtualization-safe), so the ragged
+edge tiles of an uneven ``nr × nc`` split — and both border strips of an
+n=2 halo split — describe exactly like interior tiles and *share the
+interior signature*.  The resulting :class:`PlanDescription` carries the pad
+metadata (the ``virtual`` mode + ``pad_rows``/``pad_cols``, the trailing
+output rows/cols beyond the real image) OUTSIDE the signature: registry
+lookup still lands on the one interior entry, the read stage materializes
+the spilled rows/cols by edge replication (:func:`read_plan_sources`
+host-side, halo replication of the edge-padded global under SPMD),
+mask-aware persistent filters accumulate under an in-trace 2-D validity mask
+derived from their traced (row, col) origin, and the executor crops the pad
+before the write stage.
 """
 from __future__ import annotations
 
@@ -150,11 +159,12 @@ def read_plan_sources(reads, windows) -> List:
     delivered at the full static window shape — the trace carries no pads
     for them, so border spill is edge-replicated here, at the read stage.
 
-    The read stage is *total over virtual geometry*: a read whose region
-    spills past the source's real rows (virtual padded strips) is clamped to
-    the image and edge-replicated back out — the host-side twin of the SPMD
-    executor's padded-global + halo edge replication, so a virtual plan's
-    inputs carry the same pixel values on every engine.
+    The read stage is *total over virtual geometry* in both axes: a read
+    whose region spills past the source's real rows **or columns** (virtual
+    padded tiles) is clamped to the image and edge-replicated back out — the
+    host-side twin of the SPMD executor's edge-padded-global + row/column
+    halo replication, so a virtual plan's inputs carry the same pixel values
+    on every engine.
 
     An empty ``windows`` means "no windowed reads" (plans built before the
     describe pass existed); a non-empty tuple must align with ``reads``.
@@ -217,13 +227,14 @@ class PlanDescription:
     ``needs_origin`` node lowered to a fixed-shape bounding window whose
     origin is traced), else None.
 
-    Pad metadata: ``virtual`` marks a description produced by the virtually
-    row-padded describe walk (``describe_pull(..., virtual=True)`` — no row
-    clamping, so a strip spilling past the image shares the interior
-    signature) and ``pad_rows`` counts the trailing output rows that lie
-    beyond the real image (0 on real geometry).  Neither is part of the
-    signature — that is the point: a virtual strip's plan *is* the interior
-    plan, and the executor crops/masks the pad rows instead.
+    Pad metadata: ``virtual`` carries the virtual-describe mode the walk ran
+    in (``False`` for the exact walk, ``"grid"`` for the fully unclamped 2-D
+    walk, ``"rows"`` for the restricted rows-only walk — a tile spilling
+    past the image shares the interior signature), and ``pad_rows`` /
+    ``pad_cols`` count the trailing output rows/cols that lie beyond the
+    real image (0 on real geometry).  None of these is part of the
+    signature — that is the point: a virtual tile's plan *is* the interior
+    plan, and the executor crops/masks the pad instead.
     """
 
     node: "ProcessObject"
@@ -233,8 +244,9 @@ class PlanDescription:
     origin_values: Tuple[int, ...]
     persistent_nodes: List["PersistentFilter"]
     windows: Tuple[Optional[Tuple[int, int]], ...] = ()
-    virtual: bool = False
+    virtual: "bool | str" = False
     pad_rows: int = 0
+    pad_cols: int = 0
     #: serials of nodes the plan lowers to fused Pallas bodies, and of the
     #: pointwise nodes folded into one — diagnostic mirrors of the
     #: signature's ``("pallas", ...)`` records (empty on jnp-only plans)
@@ -370,7 +382,7 @@ class PlanCache:
         pipeline,
         node,
         regions,
-        virtual: bool = False,
+        virtual: "bool | str" = False,
         execute: bool = True,
     ) -> int:
         """Warm-up protocol: describe every region of a geometry sweep, lower
@@ -379,9 +391,11 @@ class PlanCache:
         request.  Returns the number of distinct signatures ensured.
 
         ``pipeline``/``node`` follow the ``Pipeline.describe_pull`` protocol;
-        ``virtual`` selects the virtually row-padded describe walk (callers
-        should pass the same mode their serving/streaming path will use, or
-        the warmed signatures won't be the ones the live path looks up).
+        ``virtual`` selects the virtually padded describe walk (``"grid"`` /
+        ``"rows"`` / ``False`` — callers should pass
+        ``Pipeline.virtual_describe_mode()``, the same mode their
+        serving/streaming path will use, or the warmed signatures won't be
+        the ones the live path looks up).
         """
         seen = set()
         for region in regions:

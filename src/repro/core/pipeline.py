@@ -41,20 +41,24 @@ single trace.  Windowed reads carry no boundary pads in the trace — border
 spill is edge-replicated at the read stage — so border regions share the
 interior signature too.
 
-Virtual padded strips: ``describe_pull(..., virtual=True)`` runs the same
-walk against a *virtually row-padded* geometry — requests are never clamped
-(hence never padded) in the row direction, only columns clamp in-image.  A
-region that spills past the real image rows (the ragged last SPMD strip, or
-the border strips of an n=2 halo split) then describes exactly like an
-interior region and shares the interior plan signature; the spilled rows are
-materialized at the read stage instead (edge-replicated halo rows under
-SPMD, :func:`~repro.core.execplan.read_plan_sources`'s clamp+pad host-side).
+Virtual padded tiles: ``describe_pull(..., virtual=...)`` runs the same walk
+against a *virtually padded* geometry.  Two modes exist: ``"grid"`` (the
+default for ``virtual=True``) never clamps in **either** axis, so a tile of
+a 2-D SPMD grid that spills past the real image rows *or* columns describes
+exactly like an interior tile and shares the interior plan signature;
+``"rows"`` is the restricted legacy mode (rows unclamped, columns clamp
+in-image) for pipelines whose column borders are not virtualization-safe
+(:meth:`Pipeline.virtual_cols_safe`).  Spilled rows/cols are materialized at
+the read stage instead (edge-replicated halos under SPMD,
+:func:`~repro.core.execplan.read_plan_sources`'s clamp+pad host-side).
 Mask-aware persistent filters (``supports_mask``) always thread their output
-region's absolute row origin through the plan as a traced scalar and
-accumulate under an in-trace validity mask (rows inside the real image), so
-the masked-persistent case runs through the very same registry body — with
-an all-true mask on real geometry and pad rows masked out on virtual
-geometry.
+region's absolute (row, col) origin through the plan as traced scalars and
+accumulate under an in-trace 2-D validity mask (pixels inside the real
+image), so the masked-persistent case runs through the very same registry
+body — with an all-true mask on real geometry and pad rows/cols masked out
+on virtual geometry.  :meth:`Pipeline.virtual_describe_mode` picks the
+strongest safe mode per pipeline; the describe caller (streaming warm-up,
+SPMD tile prober) must use the same mode so both land on one registry entry.
 
 Pallas fast path: a node whose ``pallas_plan()`` hook is true lowers to the
 fused kernel body from ``pallas_body()`` instead of its ``generate`` — and
@@ -91,6 +95,20 @@ from repro.core.process_object import (
     windowed_requests,
 )
 from repro.core.region import ImageRegion
+
+
+def _normalize_virtual(virtual) -> "bool | str":
+    """Canonical virtual-describe mode: ``False`` (exact walk), ``"rows"``
+    (rows unclamped, columns clamp in-image) or ``"grid"`` (neither axis
+    clamps).  ``True`` means the full 2-D mode — the 1-D strip path is the
+    ``nc = 1`` column of the grid, not a separate dialect."""
+    if virtual is False or virtual is None:
+        return False
+    if virtual is True or virtual == "grid":
+        return "grid"
+    if virtual == "rows":
+        return "rows"
+    raise ValueError(f"unknown virtual describe mode: {virtual!r}")
 
 
 class Pipeline:
@@ -151,9 +169,49 @@ class Pipeline:
         bottom border strips of its own grid, graph + static node state
         only), so every describe/lower pair classifies identically.
         """
-        infos = self.update_information()
+        return self._virtual_axis_safe("rows")
 
-        probes_of = {}  # id(n) -> (top, bottom) border probe regions
+    def virtual_cols_safe(self) -> bool:
+        """True when virtual (unclamped-column) describes cannot change
+        pixels — the column mirror of :meth:`virtual_rows_safe`: spill past
+        an image's column extent must reach sources only, possibly through
+        column-transparent (column-identity-request) filters.  Both axes
+        safe ⇒ ``"grid"`` describes are exact; see
+        :meth:`virtual_describe_mode`."""
+        return self._virtual_axis_safe("cols")
+
+    def virtual_describe_mode(self) -> "bool | str":
+        """The strongest virtual describe mode this pipeline supports:
+        ``"grid"`` (neither axis clamps — required by 2-D tile-grid SPMD),
+        ``"rows"`` (rows-only virtualization), or ``False`` (exact describes
+        only).  Requires every persistent filter to be mask-aware — an
+        unmaskable accumulator would double-count edge-replicated pad pixels.
+        Every describe producer for one pipeline (streaming warm-up, the
+        SPMD tile prober, the serving engine) must take its mode from here,
+        or warm-up and execution would land on different registry entries."""
+        if not all(p.supports_mask for p in self.persistent_nodes()):
+            return False
+        if not self._virtual_axis_safe("rows"):
+            return False
+        return "grid" if self._virtual_axis_safe("cols") else "rows"
+
+    def _virtual_axis_safe(self, axis: str) -> bool:
+        """Shared structural probe behind :meth:`virtual_rows_safe` /
+        :meth:`virtual_cols_safe` — identical propagation logic, border
+        probes and identity checks taken along ``axis``."""
+        infos = self.update_information()
+        on_rows = axis == "rows"
+
+        def lo(r: ImageRegion) -> int:
+            return r.row0 if on_rows else r.col0
+
+        def hi(r: ImageRegion) -> int:
+            return r.row1 if on_rows else r.col1
+
+        def extent(info: ImageInfo) -> int:
+            return info.rows if on_rows else info.cols
+
+        probes_of = {}  # id(n) -> pair of border probe regions on `axis`
         reqs_of = {}  # id(n) -> per-probe request tuples
         for n in self._nodes:
             ups = self._inputs[id(n)]
@@ -161,27 +219,34 @@ class Pipeline:
                 continue
             own = infos[id(n)]
             in_infos = [infos[id(u)] for u in ups]
-            probe_rows = max(1, min(own.rows, 8))
-            probes = (
-                ImageRegion((0, 0), (probe_rows, own.cols)),
-                ImageRegion((own.rows - probe_rows, 0), (probe_rows, own.cols)),
-            )
+            if on_rows:
+                pr = max(1, min(own.rows, 8))
+                probes = (
+                    ImageRegion((0, 0), (pr, own.cols)),
+                    ImageRegion((own.rows - pr, 0), (pr, own.cols)),
+                )
+            else:
+                pc = max(1, min(own.cols, 8))
+                probes = (
+                    ImageRegion((0, 0), (own.rows, pc)),
+                    ImageRegion((0, own.cols - pc), (own.rows, pc)),
+                )
             probes_of[id(n)] = probes
             reqs_of[id(n)] = tuple(
                 n.requested_region(probe, *in_infos) for probe in probes
             )
 
         def transparent(u) -> bool:
-            # every request of u is row-identity with its probe region
+            # every request of u is axis-identity with its probe region
             if id(u) not in reqs_of:
                 return False  # sources handled by the caller
             return all(
-                req.row0 == probe.row0 and req.row1 == probe.row1
+                lo(req) == lo(probe) and hi(req) == hi(probe)
                 for probe, reqs in zip(probes_of[id(u)], reqs_of[id(u)])
                 for req in reqs
             )
 
-        # propagate "may receive out-of-image rows" consumer→producer
+        # propagate "may receive out-of-image rows/cols" consumer→producer
         # (insertion order is topological, so reverse order visits every
         # consumer before its producers)
         spilled = set()
@@ -192,7 +257,7 @@ class Pipeline:
             in_infos = [infos[id(u)] for u in ups]
             for probe, reqs in zip(probes_of[id(n)], reqs_of[id(n)]):
                 for u, upi, req in zip(ups, in_infos, reqs):
-                    expands = req.row0 < 0 or req.row1 > upi.rows
+                    expands = lo(req) < 0 or hi(req) > extent(upi)
                     if not (expands or id(n) in spilled):
                         continue
                     if not self._inputs[id(u)]:
@@ -277,7 +342,7 @@ class Pipeline:
     # -- symbolic pull: describe (cheap) + lower (closure construction) --------
     def describe_pull(
         self, node: ProcessObject, out_region: ImageRegion,
-        virtual: bool = False,
+        virtual: "bool | str" = False,
     ) -> PlanDescription:
         """The describe pass: reads + canonical signature + origin scalars
         for ``node`` over ``out_region``, with **no** closure construction.
@@ -286,10 +351,12 @@ class Pipeline:
         bit-identical) but skips building the O(graph) closure tree — on a
         plan-registry hit this is the only per-region graph work.
 
-        ``virtual=True`` describes against the virtually row-padded geometry
-        (no row clamping anywhere in the walk), so a region spilling past the
-        image rows yields the *interior* signature — the SPMD strip prober
-        uses this to keep ragged and n=2 strip splits on the registry path."""
+        ``virtual`` selects the padded-geometry walk: ``True`` / ``"grid"``
+        never clamps in either axis, so a tile spilling past the image rows
+        *or* columns yields the *interior* signature — the 2-D SPMD tile
+        prober uses this to keep ragged grid splits on the registry path;
+        ``"rows"`` is the restricted rows-only mode for pipelines where
+        :meth:`virtual_cols_safe` is false."""
         return self._plan_walk(node, out_region, lower=False, virtual=virtual)
 
     def lower_pull(self, desc: PlanDescription) -> "PullPlan":
@@ -322,16 +389,21 @@ class Pipeline:
         node: ProcessObject,
         out_region: ImageRegion,
         lower: bool,
-        virtual: bool = False,
+        virtual: "bool | str" = False,
     ):
         infos = self.update_information()
+        virtual = _normalize_virtual(virtual)
 
         def clamp(region: ImageRegion, own_info: ImageInfo) -> ImageRegion:
             if not virtual:
                 return region.clamp(own_info.full_region)
-            # virtual padded geometry: rows pass through unclamped (the read
-            # stage materializes spilled rows by edge replication), columns
-            # still clamp in-image so the column-pad statics match the real
+            if virtual == "grid":
+                # fully virtual padded geometry: neither axis clamps — spill
+                # in any direction is materialized at the read stage
+                return region
+            # "rows" mode: rows pass through unclamped (the read stage
+            # materializes spilled rows by edge replication), columns still
+            # clamp in-image so the column-pad statics match the real
             # interior signature
             c0 = max(region.col0, 0)
             c1 = min(region.col1, own_info.cols)
@@ -434,6 +506,19 @@ class Pipeline:
             )
             ups = self._inputs[id(n)]
             if not ups:
+                if in_window:
+                    # a windowed read's clamped rect is read-stage-only (the
+                    # delivered array is always padded to the full window),
+                    # so it is WALK-MODE-INDEPENDENT: rows pass through (the
+                    # read stage's snap handles fully-virtual rows), columns
+                    # clamp in-image (window_request anchors windows
+                    # in-image) — real and virtual describes of one window
+                    # record identical reads
+                    c0 = max(region.col0, 0)
+                    c1 = max(c0, min(region.col1, own_info.cols))
+                    clamped = ImageRegion(
+                        (region.row0, c0), (region.rows, c1 - c0)
+                    )
                 # non-windowed reads dedup on the clamped rect alone (the
                 # per-consumer spill pad is baked in the trace); windowed
                 # reads pad to their window at the read stage, so the window
@@ -506,13 +591,18 @@ class Pipeline:
                 if origin_aware
                 else None
             )
-            # mask-aware persistent filters always thread their absolute row
-            # origin as a traced scalar: the in-trace validity mask is all-true
-            # on real geometry and masks virtual pad rows under padded SPMD
-            # strips — one registry body serves both (slot registration must
-            # not depend on the walk mode, or real/virtual plans with equal
-            # signatures would disagree on the origin vector length)
-            mi = dyn(clamped.row0) if persist and n.supports_mask else None
+            # mask-aware persistent filters always thread their absolute
+            # (row, col) origin as traced scalars: the in-trace 2-D validity
+            # mask is all-true on real geometry and masks virtual pad
+            # rows/cols under padded SPMD tiles — one registry body serves
+            # both (slot registration must not depend on the walk mode, or
+            # real/virtual plans with equal signatures would disagree on the
+            # origin vector length)
+            mi = (
+                (dyn(clamped.row0), dyn(clamped.col0))
+                if persist and n.supports_mask
+                else None
+            )
             winb = wbounds if any(b is not None for b in wbounds) else None
             if pallas_on:
                 # fused chain nodes contribute no records of their own; the
@@ -563,14 +653,16 @@ class Pipeline:
                 def run_node(arrays, origins, ctx, _n=n, _clamped=clamped,
                              _region=region, _fns=child_fns, _oi=oi, _ii=ii,
                              _persist=persist, _mi=mi,
-                             _rows_total=own_info.rows):
+                             _rows_total=own_info.rows,
+                             _cols_total=own_info.cols):
                     ins = [f(arrays, origins, ctx) for f in _fns]
                     if _persist:
                         if _mi is not None:
-                            rows_abs = origins[_mi] + jnp.arange(_clamped.rows)
-                            mask = (
-                                (rows_abs >= 0) & (rows_abs < _rows_total)
-                            )[:, None, None]
+                            rows_abs = origins[_mi[0]] + jnp.arange(_clamped.rows)
+                            cols_abs = origins[_mi[1]] + jnp.arange(_clamped.cols)
+                            rv = (rows_abs >= 0) & (rows_abs < _rows_total)
+                            cv = (cols_abs >= 0) & (cols_abs < _cols_total)
+                            mask = rv[:, None, None] & cv[None, :, None]
                             ctx["pstates"][_n.name] = _n.accumulate(
                                 ctx["pstates"][_n.name], _clamped, *ins,
                                 mask=mask,
@@ -613,6 +705,11 @@ class Pipeline:
                 pad_rows=(
                     max(0, out_region.row1 - infos[id(node)].rows)
                     if virtual
+                    else 0
+                ),
+                pad_cols=(
+                    max(0, out_region.col1 - infos[id(node)].cols)
+                    if virtual == "grid"
                     else 0
                 ),
                 pallas_nodes=tuple(pallas_serials),

@@ -268,15 +268,16 @@ class PersistentFilter(Filter):
     region_independent = False  # the *state* depends on which regions were seen
     #: dict key -> Reduction for each entry of the state dict
     state_reductions: Dict[str, Reduction] = {}
-    #: SPMD strips may carry virtual padded rows past the image border;
-    #: mask-aware filters accept ``mask`` (rows, 1, 1 bool, True = valid
-    #: output row) in ``accumulate`` and ignore padded rows.  The canonical
-    #: plan always threads a mask-aware filter's absolute row origin through
-    #: the compiled function as a traced scalar and passes the derived
-    #: in-trace validity mask (all-true on real geometry, pad rows False on
-    #: virtual padded strips) — one registry body serves streaming, pool and
-    #: SPMD alike.  Filters without mask support can only run in parallel
-    #: mode when rows divide evenly across workers.
+    #: SPMD tiles may carry virtual padded rows/columns past the image
+    #: border; mask-aware filters accept ``mask`` ((rows, cols, 1) bool,
+    #: broadcastable — True = valid output pixel) in ``accumulate`` and
+    #: ignore padded pixels.  The canonical plan always threads a mask-aware
+    #: filter's absolute (row, col) origin through the compiled function as
+    #: traced scalars and passes the derived in-trace 2-D validity mask
+    #: (all-true on real geometry, pad rows/cols False on virtual padded
+    #: tiles) — one registry body serves streaming, pool and SPMD alike.
+    #: Filters without mask support can only run in parallel mode when the
+    #: image divides evenly across the worker grid.
     supports_mask: bool = False
 
     def reset(self) -> Dict[str, jnp.ndarray]:

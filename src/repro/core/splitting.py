@@ -75,19 +75,63 @@ class RowCoverage:
         return f"RowCoverage({self._ivals})"
 
 
+def padded_tile_grid(
+    rows: int, cols: int, nr: int, nc: int
+) -> tuple[int, int, int, int]:
+    """Uniform SPMD tile geometry for a ``rows × cols`` output over an
+    ``nr × nc`` worker grid: ``(Hr, Wc, pad_rows, pad_cols)`` with
+    ``Hr = ceil(rows / nr)``, ``Wc = ceil(cols / nc)`` and the pads the
+    trailing *virtual* rows/cols past the image (``nr·Hr − rows`` and
+    ``nc·Wc − cols``).
+
+    This is the geometry contract of the virtual-padded-tile SPMD path:
+    every worker owns one ``Hr × Wc`` tile of the virtually padded image,
+    the padded global input is edge-replicated over the pad rows *and*
+    pad columns, and the executor crops/masks the pad before the write
+    stage.  The 1-D strip path is exactly the ``nc = 1`` column of this
+    grid."""
+    if rows <= 0 or cols <= 0 or nr <= 0 or nc <= 0:
+        raise ValueError("rows, cols, nr and nc must be positive")
+    Hr = math.ceil(rows / nr)
+    Wc = math.ceil(cols / nc)
+    return Hr, Wc, nr * Hr - rows, nc * Wc - cols
+
+
+def virtual_tile_regions(
+    rows: int, cols: int, nr: int, nc: int
+) -> List[ImageRegion]:
+    """The ``nr × nc`` uniform virtual tiles of a ``rows × cols`` output in
+    row-major order: tile ``(i, j)`` is ``[i·Hr, (i+1)·Hr) × [j·Wc,
+    (j+1)·Wc)`` — edge tiles may spill past the image in either axis (use
+    :func:`padded_tile_grid` for the pad sizes).  Shared by the SPMD tile
+    prober and the virtual describe pass so both see identical per-worker
+    geometry."""
+    Hr, Wc, _, _ = padded_tile_grid(rows, cols, nr, nc)
+    return [
+        ImageRegion((i * Hr, j * Wc), (Hr, Wc))
+        for i in range(nr)
+        for j in range(nc)
+    ]
+
+
+def clamped_tile_spans(lo: int, hi: int, step: int) -> List[tuple[int, int]]:
+    """``(start, size)`` spans of width ``step`` covering ``[lo, hi)``
+    exactly, the last span clamped to the boundary.  The shared 1-axis
+    clamping primitive behind :class:`StripeSplitter` / :class:`TileSplitter`
+    (real, in-image tiles) — contrast :func:`virtual_tile_regions`, whose
+    tiles never clamp."""
+    if step <= 0:
+        raise ValueError("step must be positive")
+    return [(a, min(step, hi - a)) for a in range(lo, hi, step)]
+
+
 def padded_strip_rows(rows: int, n_workers: int) -> tuple[int, int]:
     """Uniform SPMD strip height + virtual row padding for ``rows`` output
     rows over ``n_workers`` strips: ``(H, pad)`` with ``H = ceil(rows / n)``
     and ``pad = n·H − rows`` trailing *virtual* rows past the image.
-
-    This is the geometry contract of the virtual-padded-strip SPMD path:
-    every worker gets an ``H``-row strip of the virtually padded image, the
-    padded global input is edge-replicated over the pad rows, and the
-    executor crops/masks the pad before the write stage."""
-    if rows <= 0 or n_workers <= 0:
-        raise ValueError("rows and n_workers must be positive")
-    H = math.ceil(rows / n_workers)
-    return H, n_workers * H - rows
+    The ``nc = 1`` special case of :func:`padded_tile_grid`."""
+    Hr, _, pad_rows, _ = padded_tile_grid(rows, 1, n_workers, 1)
+    return Hr, pad_rows
 
 
 def virtual_strip_regions(
@@ -95,13 +139,9 @@ def virtual_strip_regions(
 ) -> List[ImageRegion]:
     """The ``n_workers`` uniform virtual strips of a ``rows × cols`` output:
     strip ``k`` is ``[k·H, (k+1)·H) × [0, cols)`` — the last strip(s) may
-    spill past ``rows`` (use :func:`padded_strip_rows` for the pad size).
-    Shared by the SPMD strip prober and the virtual describe pass so both
-    see identical per-worker geometry."""
-    H, _ = padded_strip_rows(rows, n_workers)
-    return [
-        ImageRegion((k * H, 0), (H, cols)) for k in range(n_workers)
-    ]
+    spill past ``rows``.  The ``nc = 1`` special case of
+    :func:`virtual_tile_regions`."""
+    return virtual_tile_regions(rows, cols, n_workers, 1)
 
 
 class StripeSplitter(Splitter):
@@ -120,13 +160,10 @@ class StripeSplitter(Splitter):
             step = max(1, self.stripe_rows)
         else:
             step = max(1, math.ceil(rows / max(1, self.n_splits)))
-        out = []
-        r = region.row0
-        while r < region.row1:
-            h = min(step, region.row1 - r)
-            out.append(ImageRegion((r, region.col0), (h, region.cols)))
-            r += h
-        return out
+        return [
+            ImageRegion((r, region.col0), (h, region.cols))
+            for r, h in clamped_tile_spans(region.row0, region.row1, step)
+        ]
 
 
 class TileSplitter(Splitter):
@@ -139,13 +176,11 @@ class TileSplitter(Splitter):
         self.tile_cols = tile_cols
 
     def split(self, region: ImageRegion, info: ImageInfo) -> List[ImageRegion]:
-        out = []
-        for r in range(region.row0, region.row1, self.tile_rows):
-            h = min(self.tile_rows, region.row1 - r)
-            for c in range(region.col0, region.col1, self.tile_cols):
-                w = min(self.tile_cols, region.col1 - c)
-                out.append(ImageRegion((r, c), (h, w)))
-        return out
+        return [
+            ImageRegion((r, c), (h, w))
+            for r, h in clamped_tile_spans(region.row0, region.row1, self.tile_rows)
+            for c, w in clamped_tile_spans(region.col0, region.col1, self.tile_cols)
+        ]
 
 
 class AutoSplitter(Splitter):

@@ -89,25 +89,28 @@ from repro.core.splitting import Splitter, StripeSplitter
 _SCHEDULERS = ("static", "lpt", "work_stealing")
 
 
-def _virtual_describe_ok(pipeline: Pipeline) -> bool:
-    """True when the streaming drivers may describe every strip against the
-    virtual padded geometry (no row clamping).  Two structural conditions:
+def _virtual_describe_mode(pipeline: Pipeline) -> "bool | str":
+    """The virtual describe mode the streaming drivers use for every strip
+    or tile: ``"grid"`` (no clamping in either axis), ``"rows"`` (rows only)
+    or ``False`` (exact clamped describes).  Structural conditions, decided
+    by :meth:`Pipeline.virtual_describe_mode`:
 
       * any persistent filter must be mask-aware — under virtual geometry a
-        border strip's accumulation region can include edge-replicated pad
-        rows that only a validity mask (``supports_mask``) keeps out of the
+        border region's accumulation can include edge-replicated pad pixels
+        that only a validity mask (``supports_mask``) keeps out of the
         reduction;
-      * every row-spilling halo request must land directly on a source
-        (:meth:`Pipeline.virtual_rows_safe`) — a halo landing on an
+      * every spilling halo request on the virtualized axis must land
+        directly on a source (:meth:`Pipeline.virtual_rows_safe` /
+        :meth:`Pipeline.virtual_cols_safe`) — a halo landing on an
         intermediate filter (stacked neighborhood filters) is clamped and
         output-replicated by the exact walk but *computed* from replicated
         source rows by the virtual walk, so those pipelines keep the exact
         per-border describes to preserve the eager oracle's border pixels.
-    """
-    return (
-        all(p.supports_mask for p in pipeline.persistent_nodes())
-        and pipeline.virtual_rows_safe()
-    )
+
+    The SPMD tile prober (:func:`repro.core.parallel.build_tile_plan`) takes
+    its mode from the same method, so a streaming warm-up and a subsequent
+    grid run land on one registry entry."""
+    return pipeline.virtual_describe_mode()
 
 
 class _WriteBehind:
@@ -211,7 +214,7 @@ class StreamingExecutor:
         # instead of being clamped into a per-border plan.  Persistent filters
         # that are not mask-aware would accumulate the replicated pad rows, so
         # those pipelines keep the exact clamped describes.
-        self.describe_virtual = _virtual_describe_ok(pipeline)
+        self.describe_virtual = _virtual_describe_mode(pipeline)
 
     def my_regions(self) -> List[ImageRegion]:
         info = self.pipeline.info(self.mapper)
@@ -427,7 +430,7 @@ def run_pool(
     persistent = pipeline.persistent_nodes()
     # same border-strip virtualization as StreamingExecutor._prepare: all
     # workers then land on the one interior signature (single lower+compile)
-    describe_virtual = _virtual_describe_ok(pipeline)
+    describe_virtual = _virtual_describe_mode(pipeline)
     worker_states = [{p.name: p.reset() for p in persistent} for _ in range(n_workers)]
     counts = [0] * n_workers
     pixel_counts = [0] * n_workers
@@ -554,7 +557,7 @@ class BatchedRegionPuller:
     makes tile outputs depend on request order, which serving cannot honor.
 
     ``virtual`` should carry the same describe mode the streaming oracle
-    would pick (:func:`_virtual_describe_ok`), so tile signatures collapse
+    would pick (:func:`_virtual_describe_mode`), so tile signatures collapse
     onto the entries a streaming warm-up run already lowered.
 
     ``read_cache_entries`` bounds an LRU of per-region source reads (the
@@ -570,7 +573,7 @@ class BatchedRegionPuller:
         node,
         plan_cache: Optional[PlanCache] = None,
         batch_sizes=(1, 4, 16),
-        virtual: Optional[bool] = None,
+        virtual: "Optional[bool | str]" = None,
         read_cache_entries: int = 1024,
     ):
         if pipeline.persistent_nodes():
@@ -586,7 +589,7 @@ class BatchedRegionPuller:
         if not self.batch_sizes or self.batch_sizes[0] < 1:
             raise ValueError(f"bad batch_sizes: {batch_sizes}")
         self.virtual = (
-            _virtual_describe_ok(pipeline) if virtual is None else bool(virtual)
+            _virtual_describe_mode(pipeline) if virtual is None else virtual
         )
         self.read_cache_entries = int(read_cache_entries)
         self._read_cache: "collections.OrderedDict[Tuple, List]" = (

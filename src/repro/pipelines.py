@@ -290,6 +290,7 @@ def run_pipeline(
     n_workers: Optional[int] = None,
     keep_outputs: bool = False,
     mapper_factory=None,
+    grid=None,
     **builder_kw,
 ):
     """Execute a benchmark pipeline through the shared ExecutionPlan registry.
@@ -299,7 +300,9 @@ def run_pipeline(
     ``"streaming"`` (single-threaded double-buffered engine), ``"pool"``
     (``n_workers`` work-stealing threads, default 1) or ``"spmd"``
     (shard_map over the devices, capped at ``n_workers`` when given,
-    otherwise all).
+    otherwise all).  Under ``"spmd"``, ``grid=(nr, nc)`` lays the devices
+    out as a 2-D tile grid (``nr × nc`` devices are used); the default is
+    the 1-D ``(n, 1)`` strip decomposition.
 
     Plan signatures are keyed by node identity, so registry reuse happens
     for runs of the *same built pipeline*: pass the ``(pipeline, mapper)``
@@ -337,9 +340,10 @@ def run_pipeline(
     elif executor == "spmd":
         import jax
 
-        devices = jax.devices()[:n_workers] if n_workers else None
+        take = grid[0] * grid[1] if grid is not None else n_workers
+        devices = jax.devices()[:take] if take else None
         res = ParallelExecutor(
-            pipeline, mapper, devices=devices, plan_cache=cache
+            pipeline, mapper, devices=devices, plan_cache=cache, grid=grid
         ).run(keep_outputs=keep_outputs)
     else:
         raise ValueError(f"unknown executor {executor!r}")

@@ -182,6 +182,111 @@ def test_spmd_differential_matrix(subproc, devices):
     assert f"SPMD_DIFF_OK {devices}" in out
 
 
+# -- 2-D tile-grid column: grid SPMD vs streaming tile warm-up ----------------
+# The tile-grid generalization must be invisible in the pixels AND in the
+# plan cache: after a streaming warm-up on the matching Hr×Wc tile geometry,
+# a ParallelExecutor over an (nr, nc) device mesh takes the unified tile
+# path, records ZERO new lowers and ZERO new compiles (pure registry hits —
+# every tile of the grid, ragged columns included, shares the one interior
+# signature the streaming border tiles already lowered), and reproduces the
+# streaming output bit-for-bit.
+CODE_GRID_DIFF = r"""
+import numpy as np
+from repro import pipelines as PP
+from repro.core import (
+    PlanCache, StreamingExecutor, TileSplitter, padded_tile_grid,
+)
+from repro.core.parallel import ParallelExecutor
+from repro.raster import SyntheticScene
+
+NR, NC = {nr}, {nc}
+
+def src(rows, cols):
+    return SyntheticScene(rows, cols, bands=4, dtype=np.float32)
+
+def p3_ratio2():
+    # ratio-2 pansharpening: tile origins must stay multiples of the
+    # resample phase, so the 52x40 output keeps Hr and Wc even on every
+    # grid column (26x20 at 2x2, 52x10 at 1x4, 26x14+pad at ragged 2x3) —
+    # and the 20-col XS source keeps the per-worker column pitch above the
+    # 3-col bicubic halo even on the 4-column mesh
+    xs = SyntheticScene(26, 20, bands=4, seed=0, name="XS")
+    pan = SyntheticScene(52, 40, bands=1, seed=7, name="PAN")
+    return PP.p3_pansharpening(xs, pan, ratio=2)
+
+CASES = {{
+    # 45x34 is ragged in BOTH axes on the 2x3 mesh (pad_rows=1, pad_cols=2)
+    "P2": (lambda: PP.p2_textures(src(45, 34), radius=2, levels=4), True),
+    "P3": (p3_ratio2, False),
+    "P5": (lambda: PP.p5_meanshift(src(48, 32), hs=2, n_iter=2), True),
+}}
+
+for name, (build, eager_exact) in CASES.items():
+    p, m = build()
+    info = p.info(m)
+    oracle = np.asarray(p.pull(m, info.full_region))
+    Hr, Wc, pad_r, pad_c = padded_tile_grid(info.rows, info.cols, NR, NC)
+
+    cache = PlanCache()
+    # streaming warm-up on the SAME Hr x Wc tile geometry the mesh will use
+    StreamingExecutor(
+        p, m, TileSplitter(Hr, Wc), plan_cache=cache, prefetch=0
+    ).run()
+    streamed = np.array(m.result)
+    lowers0, compiles0 = cache.stats.lowers, cache.stats.compiles
+    hits0 = cache.stats.hits
+    if eager_exact:
+        np.testing.assert_array_equal(
+            streamed, oracle, err_msg=f"{{name}}: streaming != eager oracle")
+
+    pe = ParallelExecutor(p, m, plan_cache=cache, grid=(NR, NC))
+    res = pe.run()
+    assert pe.plan.unified, (name, "fell off the unified tile path")
+    assert pe.plan.grid == (NR, NC), (name, pe.plan.grid)
+    assert (pe.plan.tile_rows, pe.plan.tile_cols) == (Hr, Wc), (
+        name, pe.plan.tile_rows, pe.plan.tile_cols)
+    assert (pe.plan.pad_rows, pe.plan.pad_cols) == (pad_r, pad_c), (
+        name, pe.plan.pad_rows, pe.plan.pad_cols)
+    assert res.cache_stats is cache.stats, name
+    # the acceptance bar: the grid run is a PURE registry hit — all nr*nc
+    # tiles (ragged edges included) resolve to the warmed interior plan
+    assert cache.stats.lowers == lowers0, (name, cache.stats)
+    assert cache.stats.compiles == compiles0, (name, cache.stats)
+    assert cache.stats.hits > hits0, (name, cache.stats)
+    np.testing.assert_array_equal(
+        np.asarray(m.result), streamed,
+        err_msg=f"{{name}}: grid spmd not bit-identical to streaming")
+    if eager_exact:
+        np.testing.assert_array_equal(
+            np.asarray(m.result), oracle,
+            err_msg=f"{{name}}: grid spmd not bit-identical to eager oracle")
+    else:
+        np.testing.assert_allclose(
+            np.asarray(m.result).astype(np.float64), oracle.astype(np.float64),
+            rtol=1e-4, atol=1e-3, err_msg=f"{{name}}: grid spmd != eager oracle")
+
+    # a second mesh run reuses the registered program AND the tile plan
+    hits1, lowers1 = cache.stats.hits, cache.stats.lowers
+    ParallelExecutor(p, m, plan_cache=cache, grid=(NR, NC)).run()
+    np.testing.assert_array_equal(np.asarray(m.result), streamed)
+    assert cache.stats.lowers == lowers1, (name, cache.stats)
+    assert cache.stats.compiles == compiles0, (name, cache.stats)
+    assert cache.stats.hits >= hits1 + 2, (name, cache.stats)
+
+print("GRID_DIFF_OK", NR, NC)
+"""
+
+
+# (2,2) square mesh, (1,4) pure column split (rows whole), and the ragged
+# (2,3) mesh where no case's cols divide by 3 — the acceptance geometry
+@pytest.mark.parametrize("grid", [(2, 2), (1, 4), (2, 3)])
+def test_grid_differential_matrix(subproc, grid):
+    nr, nc = grid
+    out = subproc(CODE_GRID_DIFF.format(nr=nr, nc=nc), devices=nr * nc,
+                  timeout=1800)
+    assert f"GRID_DIFF_OK {nr} {nc}" in out
+
+
 # -- Pallas column: kernel-backed pipelines × executors × pallas-interpret ----
 # P2/P3/P5 are the registry pipelines with Pallas kernels; use_pallas=True on
 # CPU deterministically selects interpret mode, so this column runs the SAME
