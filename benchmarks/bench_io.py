@@ -1,7 +1,14 @@
 """Figure 1 reproduction: read/write scaling of the strip-parallel raster
-writer vs number of workers (the paper's MPI ranks → writer threads here).
+writer vs number of workers (the paper's MPI ranks → writer threads here),
+plus the cloud-native column: windowed reads through the tiled RTIC
+container vs the flat RTIF file.
 
-Prints ``name,us_per_call,derived`` CSV rows; derived = speedup vs 1 worker.
+Everything rides the Source/Sink protocol (``RasterReader.read_many`` /
+``ParallelRasterWriter.write_many`` — the free-function trio is deprecated).
+
+Prints ``name,us_per_call,derived`` CSV rows; derived = speedup vs 1 worker
+for the scaling rows, flat/tiled time ratio for ``io_read_tiled_win`` (> 1
+means the tile layout wins on small windows).
 """
 from __future__ import annotations
 
@@ -11,10 +18,11 @@ from pathlib import Path
 
 import numpy as np
 
-from repro.core import ImageInfo, StripeSplitter, whole
-from repro.raster import io as rio
+from repro.core import ImageInfo, ImageRegion, StripeSplitter, whole
+from repro.raster import ParallelRasterWriter, RasterReader, TiledSource, TileWriter
 
 WORKERS = (1, 2, 4, 8, 12, 16, 32)
+WORKERS_QUICK = (1, 2, 4, 8)
 
 
 def _time(fn, repeats=3):
@@ -26,8 +34,33 @@ def _time(fn, repeats=3):
     return best
 
 
-def run(rows: int = 2048, cols: int = 2048, bands: int = 4) -> list:
+def _write(path: str, info: ImageInfo, strips, n_writers: int) -> None:
+    w = ParallelRasterWriter(path)
+    w.begin(info)
+    try:
+        w.write_many(strips, n_writers=n_writers)
+    finally:
+        w.end()
+
+
+def _windows(rows, cols, size=64, n=32, seed=7):
+    rng = np.random.default_rng(seed)
+    return [
+        ImageRegion(
+            (int(r), int(c)), (min(size, rows - r), min(size, cols - c))
+        )
+        for r, c in zip(
+            rng.integers(0, max(1, rows - size), size=n),
+            rng.integers(0, max(1, cols - size), size=n),
+        )
+    ]
+
+
+def run(rows: int = 2048, cols: int = 2048, bands: int = 4,
+        quick: bool = False) -> list:
     """Scaled-down XS product (paper: 10699×11899×4 uint16)."""
+    if quick:
+        rows, cols = min(rows, 1024), min(cols, 1024)
     info = ImageInfo(rows, cols, bands, np.uint16)
     data = np.random.default_rng(0).integers(
         0, 4096, size=(rows, cols, bands)
@@ -35,15 +68,39 @@ def run(rows: int = 2048, cols: int = 2048, bands: int = 4) -> list:
     tmp = Path(tempfile.mkdtemp())
     rows_out = []
     base_w = base_r = None
-    for n in WORKERS:
+    flat_path = None
+    for n in WORKERS_QUICK if quick else WORKERS:
         regions = StripeSplitter(n_splits=max(n, 8)).split(whole(rows, cols), info)
         strips = [(r, data[r.slices()]) for r in regions]
         path = str(tmp / f"io_{n}.rtif")
+        flat_path = flat_path or path
 
-        t_w = _time(lambda: rio.parallel_write(path, info, strips, n_writers=n))
-        t_r = _time(lambda: rio.parallel_read(path, regions, n_readers=n))
+        t_w = _time(lambda: _write(path, info, strips, n_writers=n))
+        reader = RasterReader(path)
+        t_r = _time(lambda: reader.read_many(regions, n_readers=n))
         base_w = base_w or t_w
         base_r = base_r or t_r
         rows_out.append((f"io_write_w{n}", t_w * 1e6, base_w / t_w))
         rows_out.append((f"io_read_w{n}", t_r * 1e6, base_r / t_r))
+
+    # -- tiled vs flat windowed reads (the cloud-serving access pattern) -----
+    # small scattered windows: the flat file reads one byte range per window
+    # row, the tiled container a handful of whole tiles (cached across
+    # overlapping windows).  Report-only — the ratio depends on the page
+    # cache — but the row keeps the comparison on the perf trajectory.
+    tiled_path = str(tmp / "io.rtic")
+    tw = TileWriter(tiled_path, tile_rows=256, levels=1)
+    tw.begin(info)
+    tw.consume(whole(rows, cols), data)
+    tw.end()
+    wins = _windows(rows, cols)
+    flat = RasterReader(flat_path)
+    t_flat = _time(lambda: flat.read_many(wins))
+    tiled = TiledSource(tiled_path)
+    try:
+        t_tiled = _time(lambda: tiled.read_many(wins))
+    finally:
+        tiled.close()
+    rows_out.append(("io_read_flat_win", t_flat * 1e6, 1.0))
+    rows_out.append(("io_read_tiled_win", t_tiled * 1e6, t_flat / t_tiled))
     return rows_out

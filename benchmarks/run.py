@@ -37,7 +37,7 @@ import traceback
 
 #: section name -> (module path, callable taking the parsed args)
 SECTIONS = {
-    "io": ("benchmarks.bench_io", lambda mod, args: mod.run()),
+    "io": ("benchmarks.bench_io", lambda mod, args: mod.run(quick=args.quick)),
     "streaming": (
         "benchmarks.bench_streaming",
         lambda mod, args: mod.run(quick=args.quick),
@@ -80,6 +80,9 @@ _SNAPSHOT_METRICS = {
     "serving_tiles_per_sec": ("serving_storm_batched", "derived"),
     "serving_batched_speedup": ("serving_batched_speedup", "derived"),
     "serving_post_warm_lowers": ("serving_first_request_lowers", "derived"),
+    # PR 10 cloud-native IO: flat/tiled time ratio for scattered windowed
+    # reads (> 1 when the RTIC tile layout beats flat row-segment reads)
+    "io_tiled_over_flat": ("io_read_tiled_win", "derived"),
 }
 
 

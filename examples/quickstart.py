@@ -9,7 +9,8 @@ whole-image run.
 """
 import numpy as np
 
-from repro.core import AutoSplitter, Pipeline, StreamingExecutor
+from repro import pipelines as PP
+from repro.core import AutoSplitter, Pipeline
 from repro.filters import BandStatistics, ndvi
 from repro.raster import MemoryMapper, SyntheticScene
 
@@ -24,8 +25,10 @@ sink = p.add(MemoryMapper(), [stats])
 #    stream the image through the pipeline in ~256 KiB regions
 splitter = AutoSplitter(memory_budget_bytes=256 * 1024, n_workers=1)
 
-# 3. execute
-result = StreamingExecutor(p, sink, splitter).run()
+# 3. execute through the unified runner (any executor, one plan registry);
+#    a prebuilt (pipeline, mapper) pair goes in as-is — sources and sinks
+#    are protocol objects, so a file path or ndarray would work here too
+result, _ = PP.run_pipeline((p, sink), splitter=splitter)
 ndvi_img = sink.result[..., 0]
 s = result.persistent_results["BandStatistics"]
 

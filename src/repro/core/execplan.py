@@ -55,7 +55,19 @@ Plan lifecycle — every executor follows the same steps::
             │                   steps lower to pallas_body(pre_fns): ONE
             ▼                   fused Pallas call per tile, the chain's
       PullPlan.canonical_fn     pre_fns applied on VMEM tiles in-kernel
-                                fn(arrays, pstates, origins) → jit + register
+            │                   fn(arrays, pstates, origins) → jit + register
+            │ tiled read        read_plan_sources resolves every plan read
+            ▼                   through the Source/Sink protocol: flat RTIF
+      source arrays             memmap windows, or RTIC tiled reads (tile
+                                cover ∩ LRU cache over range requests, with
+                                the streaming engine's schedule prefetched
+                                async via RasterSource.read_ahead).  Tiled
+                                sources stamp tile geometry + overview level
+                                into the read records (Source.read_record),
+                                so a re-tiled container never aliases a flat
+                                source's signature — and a TiledSource plan
+                                warmed by one executor is a registry hit for
+                                every other, same as flat sources.
 
 Serving request path — the tile-serving front end (:mod:`repro.serve.tiles`)
 rides the same lifecycle, one extra registry hop deep::

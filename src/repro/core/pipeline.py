@@ -533,16 +533,22 @@ class Pipeline:
                     reads.append((n, clamped, region))  # type: ignore[arg-type]
                     read_windows.append(region.size if in_window else None)
                 idx = read_index[k]
+                # tiled/range-readable sources stamp their storage geometry
+                # (tile size, overview level) into the read record — see
+                # Source.read_record
+                rrec = n.read_record()
                 if in_window:
                     # windowed read: static window shape, no pads in the
                     # trace — border spill is materialized at the READ stage
                     # (host boundary_pad / SPMD halo replication), so border
                     # regions share the interior signature
                     sig.append(("wread", n._serial, idx, region.size,
-                                np.dtype(own_info.dtype).str, own_info.bands))
+                                np.dtype(own_info.dtype).str, own_info.bands,
+                                rrec))
                 else:
                     sig.append(("read", n._serial, idx, clamped.size, pads,
-                                np.dtype(own_info.dtype).str, own_info.bands))
+                                np.dtype(own_info.dtype).str, own_info.bands,
+                                rrec))
                 fn = None
                 if lower:
                     if in_window:

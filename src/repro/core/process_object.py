@@ -236,6 +236,15 @@ class Source(ProcessObject):
     def generate(self, out_region: ImageRegion) -> jnp.ndarray:  # type: ignore[override]
         raise NotImplementedError
 
+    def read_record(self):
+        """Extra *static* data stamped into this source's plan-signature read
+        records (the source-side analogue of :meth:`plan_key`).  Tiled
+        containers return their tile geometry + overview level here so a
+        re-tiled or re-leveled container never aliases a flat source's plan;
+        plain sources return None.  Must be hashable and deterministic —
+        describe and lower walks both record it and assert equality."""
+        return None
+
 
 class Filter(ProcessObject):
     """Transforms data objects."""

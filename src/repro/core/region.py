@@ -118,3 +118,32 @@ class ImageRegion:
 
 def whole(rows: int, cols: int) -> ImageRegion:
     return ImageRegion((0, 0), (rows, cols))
+
+
+def tile_cover(
+    region: ImageRegion,
+    tile_rows: int,
+    tile_cols: int,
+    bounds: ImageRegion | None = None,
+) -> Iterator[Tuple[int, int, ImageRegion]]:
+    """Iterate the fixed tile grid cells covering ``region``.
+
+    Yields ``(ty, tx, tile_region)`` where ``tile_region`` is the full extent
+    of grid cell ``(ty, tx)`` — clipped to ``bounds`` when given (ragged
+    right/bottom tiles of an image that is not a tile-size multiple), *not*
+    intersected with ``region``.  This is the region↔tile algebra shared by
+    the tiled container (:mod:`repro.raster.tiled`): a windowed read visits
+    exactly these cells, a writer flushes a cell once its pixels are covered.
+    """
+    if region.is_empty():
+        return
+    ty0, tx0 = region.row0 // tile_rows, region.col0 // tile_cols
+    ty1, tx1 = (region.row1 - 1) // tile_rows, (region.col1 - 1) // tile_cols
+    for ty in range(ty0, ty1 + 1):
+        for tx in range(tx0, tx1 + 1):
+            tile = ImageRegion(
+                (ty * tile_rows, tx * tile_cols), (tile_rows, tile_cols)
+            )
+            if bounds is not None:
+                tile = tile.clamp(bounds)
+            yield ty, tx, tile

@@ -261,6 +261,16 @@ class StreamingExecutor:
         regions = self.my_regions()
         compiled_path = self.use_jit and self.cache
 
+        # hand the region schedule to range-readable sources before the
+        # region loop: tiled/remote sources (RasterSource.read_ahead)
+        # prefetch the covering tiles on their own thread, overlapping range
+        # fetches with plan execution.  A best-effort hint — sources clamp
+        # the schedule to their own geometry and plain sources ignore it.
+        for src in pipeline.sources():
+            ra = getattr(src, "read_ahead", None)
+            if callable(ra):
+                ra(regions)
+
         def compute(prep) -> np.ndarray:
             nonlocal pstates
             plan, fn, arrays = prep

@@ -11,7 +11,7 @@ from repro.filters.classify import (
     train_forest,
     forest_predict,
 )
-from repro.filters.pointwise import Convert, BandMath, Concat, ndvi
+from repro.filters.pointwise import Convert, BandMath, Composite, Concat, ndvi
 from repro.filters.stats import BandStatistics
 from repro.filters.convolution import (
     SeparableConvolution,
@@ -39,6 +39,7 @@ __all__ = [
     "forest_predict",
     "Convert",
     "BandMath",
+    "Composite",
     "Concat",
     "ndvi",
     "BandStatistics",

@@ -76,6 +76,42 @@ def ndvi(red_band: int = 0, nir_band: int = 3) -> BandMath:
     return BandMath(fn, out_bands=1, name="ndvi")
 
 
+class Composite(Filter):
+    """Elementwise reduction across same-grid inputs — the per-pixel
+    compositing step of multi-temporal workloads (max-NDVI composites,
+    min/mean mosaick­ing).  Zero-halo and region-independent: the reduction
+    is per-pixel, so any region decomposition reassembles identically."""
+
+    _OPS = ("max", "min", "mean", "sum")
+
+    def __init__(self, n_inputs: int, op: str = "max", out_dtype=np.float32,
+                 name=None):
+        if op not in self._OPS:
+            raise ValueError(f"op must be one of {self._OPS}, got {op!r}")
+        super().__init__(name or f"composite:{op}")
+        self.n_inputs = int(n_inputs)
+        self.op = op
+        self.out_dtype = np.dtype(out_dtype)
+
+    def output_info(self, *infos: ImageInfo) -> ImageInfo:
+        rows, cols, bands = infos[0].rows, infos[0].cols, infos[0].bands
+        if any((i.rows, i.cols, i.bands) != (rows, cols, bands) for i in infos):
+            raise ValueError("Composite inputs must share grid and bands")
+        return ImageInfo(rows, cols, bands, self.out_dtype, infos[0].geo)
+
+    def generate(self, out_region: ImageRegion, *xs: jnp.ndarray) -> jnp.ndarray:
+        stack = jnp.stack([x.astype(jnp.float32) for x in xs])
+        if self.op == "max":
+            y = stack.max(axis=0)
+        elif self.op == "min":
+            y = stack.min(axis=0)
+        elif self.op == "mean":
+            y = stack.mean(axis=0)
+        else:
+            y = stack.sum(axis=0)
+        return y.astype(self.out_dtype)
+
+
 class Concat(Filter):
     """Stack the bands of multiple same-grid inputs."""
 

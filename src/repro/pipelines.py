@@ -1,4 +1,6 @@
-"""The paper's seven benchmark pipelines P1–P7 (§III.B) as ready-made graphs.
+"""The paper's seven benchmark pipelines P1–P7 (§III.B) as ready-made graphs,
+plus the catalog-driven multi-scene pipelines P8 (mosaic) and P9 (NDVI
+time-series composite).
 
 Each builder returns ``(pipeline, mapper)`` terminated by the given mapper
 factory (defaults to an in-memory mapper; pass a ParallelRasterWriter factory
@@ -24,6 +26,7 @@ import numpy as np
 
 from repro.core import Mapper, Pipeline, Source, Stage, StripeSplitter
 from repro.filters import (
+    Composite,
     Convert,
     HaralickTextures,
     MeanShift,
@@ -32,6 +35,7 @@ from repro.filters import (
     RandomForestClassify,
     Resample,
     SensorModel,
+    ndvi,
     train_forest,
 )
 from repro.raster import MemoryMapper
@@ -127,6 +131,72 @@ def p7_resampling(src: Source, factor: int = 4, mapper_factory=None) -> Tuple[Pi
     s = p.add(src)
     f = p.add(Resample(factor, method="bicubic"), [s])
     m = p.add(_mapper(mapper_factory), [f])
+    return p, m
+
+
+def p8_mosaic(
+    catalog=None,
+    rows: int = 48,
+    cols: int = 32,
+    n_scenes: int = 4,
+    seed: int = 0,
+    mapper_factory=None,
+    use_pallas: Optional[bool] = None,
+) -> Tuple[Pipeline, Mapper]:
+    """P8: catalog-driven mosaic — a :class:`~repro.raster.SceneCatalog`
+    assembled by :class:`~repro.raster.MosaicSource` (later scenes win
+    overlaps), rescaled to reflectance.  ``catalog`` may be a SceneCatalog,
+    a ready MosaicSource, or a list of SceneEntry; the default is the
+    overlapping-quadrant demo catalog."""
+    from repro.raster.catalog import MosaicSource, SceneCatalog, demo_catalog
+
+    if catalog is None:
+        catalog = demo_catalog(rows, cols, n_scenes=n_scenes, seed=seed)
+    if isinstance(catalog, MosaicSource):
+        src = catalog
+    else:
+        if not isinstance(catalog, SceneCatalog):
+            catalog = SceneCatalog(list(catalog))
+        src = MosaicSource(catalog)
+    p = Pipeline()
+    s = p.add(src)
+    f = p.add(
+        Convert(np.float32, in_range=(0.0, 4096.0), out_range=(0.0, 1.0)), [s]
+    )
+    m = p.add(_mapper(mapper_factory), [f])
+    return p, m
+
+
+def p9_ndvi_composite(
+    *scenes: Source,
+    periods: int = 3,
+    rows: int = 48,
+    cols: int = 32,
+    seed: int = 0,
+    op: str = "max",
+    red_band: int = 0,
+    nir_band: int = 3,
+    mapper_factory=None,
+    use_pallas: Optional[bool] = None,
+) -> Tuple[Pipeline, Mapper]:
+    """P9: NDVI time-series composite — per-date NDVI, reduced elementwise
+    across dates (max-NDVI composite by default).  Pass the scenes as
+    sources, as one :class:`~repro.raster.SceneCatalog` (composited in
+    acquisition order), or nothing for the synthetic ``periods``-date demo
+    series."""
+    from repro.raster.catalog import SceneCatalog, demo_time_series
+
+    if len(scenes) == 1 and isinstance(scenes[0], SceneCatalog):
+        scenes = tuple(e.source for e in scenes[0].by_time())
+    if not scenes:
+        cat = demo_time_series(rows, cols, periods=periods, seed=seed)
+        scenes = tuple(e.source for e in cat.by_time())
+    p = Pipeline()
+    heads = [
+        p.add(ndvi(red_band, nir_band), [p.add(s)]) for s in scenes
+    ]
+    comp = p.add(Composite(len(heads), op=op), heads)
+    m = p.add(_mapper(mapper_factory), [comp])
     return p, m
 
 
@@ -229,10 +299,12 @@ def build_tile_server(
     """Register the kernel-backed pipelines (P2 textures, P3 pansharpening,
     P5 mean-shift) for tile serving across zoom levels.
 
-    Zoom ``z`` serves a ``2**z``-decimated view of the synthetic scene
-    (:class:`~repro.raster.DecimatedSource` — tile-window reads on the base,
-    never the full image); P3 keeps its 4× PAN/XS ratio at every zoom by
-    decimating both products.  Keep ``tile_rows``/``tile_cols`` multiples of
+    Zoom ``z`` serves the ``2**z`` overview view of each product, routed
+    through the Source/Sink protocol (:func:`repro.serve.tiles.zoom_view`):
+    pyramidal sources serve stored levels, everything else decimates on the
+    fly (:class:`~repro.raster.DecimatedSource` — tile-window reads on the
+    base, never the full image); P3 keeps its 4× PAN/XS ratio at every zoom
+    by decimating both products.  Keep ``tile_rows``/``tile_cols`` multiples of
     the resample ratio (4) so P3 tiles share tap phase — interior tiles then
     collapse to one plan signature per zoom and batch together.
 
@@ -241,18 +313,20 @@ def build_tile_server(
     ``start()``/``submit()``.  Extra keyword arguments construct the server
     (admission controller, batch sizes, tile cache size, ...).
     """
-    from repro.raster.sources import DecimatedSource, SyntheticScene, make_spot6_pair
+    from repro.raster.sources import SyntheticScene, make_spot6_pair
     from repro.serve import TileServer
+    from repro.serve.tiles import zoom_view
 
     if server is None:
         server = TileServer(**server_kw)
     elif server_kw:
         raise ValueError("pass server_kw only when the server is built here")
     for z in zooms:
-        f = 2 ** int(z)
 
-        def _zoomed(src: Source) -> Source:
-            return src if f == 1 else DecimatedSource(src, f)
+        def _zoomed(src: Source, _z=z) -> Source:
+            # protocol overview(): stored pyramid levels for pyramidal
+            # sources, DecimatedSource wrap for everything else
+            return zoom_view(src, _z)
 
         if "P2" in pipelines:
             scene = SyntheticScene(rows_xs, cols_xs, bands=4, seed=seed, name=f"XS_z{z}")
@@ -277,6 +351,8 @@ ALL = {
     "P5": p5_meanshift,
     "P6": p6_conversion,
     "P7": p7_resampling,
+    "P8": p8_mosaic,
+    "P9": p9_ndvi_composite,
     "IO": io_passthrough,
 }
 
@@ -290,6 +366,7 @@ def run_pipeline(
     n_workers: Optional[int] = None,
     keep_outputs: bool = False,
     mapper_factory=None,
+    sink=None,
     grid=None,
     **builder_kw,
 ):
@@ -304,6 +381,14 @@ def run_pipeline(
     out as a 2-D tile grid (``nr × nc`` devices are used); the default is
     the 1-D ``(n, 1)`` strip decomposition.
 
+    Sources and sinks go in as **protocol objects**, uniformly across every
+    executor: each positional source may be a :class:`~repro.core.Source`, a
+    file path (container magic picks RTIF vs tiled RTIC) or an ndarray
+    (:func:`repro.raster.as_source`); ``sink=`` accepts a
+    :class:`~repro.core.Mapper` or a path (``.rtic`` writes the tiled
+    container, anything else the flat strip-parallel RTIF —
+    :func:`repro.raster.as_sink`) and replaces ``mapper_factory``.
+
     Plan signatures are keyed by node identity, so registry reuse happens
     for runs of the *same built pipeline*: pass the ``(pipeline, mapper)``
     pair to run one graph on several executors — matching strip geometry is
@@ -316,8 +401,26 @@ def run_pipeline(
     Returns ``(StreamResult, mapper)``; the result's ``cache_stats`` exposes
     the registry counters whichever executor ran.
     """
+    import os
+
     from repro.core import StreamingExecutor, global_plan_cache, run_pool
     from repro.core.parallel import ParallelExecutor
+    from repro.raster.protocol import as_sink, as_source
+
+    # paths/arrays coerce to protocol sources; Sources (and builder-specific
+    # arguments like SceneCatalogs) pass through untouched
+    sources = tuple(
+        as_source(s) if isinstance(s, (str, os.PathLike, np.ndarray)) else s
+        for s in sources
+    )
+    if sink is not None:
+        if mapper_factory is not None:
+            raise ValueError("pass sink= or mapper_factory=, not both")
+        if isinstance(name, tuple):
+            raise ValueError(
+                "a prebuilt (pipeline, mapper) pair already carries its sink"
+            )
+        mapper_factory = lambda: as_sink(sink)  # noqa: E731
 
     if isinstance(name, tuple):
         pipeline, mapper = name

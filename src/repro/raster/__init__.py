@@ -1,5 +1,15 @@
-"""Raster substrate: data model, file I/O (strip-parallel RTIF), sources, mappers."""
+"""Raster substrate: data model, file I/O (strip-parallel RTIF + tiled
+pyramidal RTIC), the Source/Sink protocol, sources, sinks, scene catalogs."""
 from repro.raster import io
+from repro.raster.protocol import (
+    CAP_PYRAMIDAL,
+    CAP_RANGE_READABLE,
+    CAP_TILED,
+    RasterSink,
+    RasterSource,
+    as_sink,
+    as_source,
+)
 from repro.raster.sources import (
     ArraySource,
     DecimatedSource,
@@ -7,15 +17,44 @@ from repro.raster.sources import (
     SyntheticScene,
     make_spot6_pair,
 )
+from repro.raster.tiled import (
+    FileRangeReader,
+    MemoryRangeReader,
+    TiledSource,
+    TileWriter,
+)
+from repro.raster.catalog import (
+    MosaicSource,
+    SceneCatalog,
+    SceneEntry,
+    demo_catalog,
+    demo_time_series,
+)
 from repro.raster.mappers import MemoryMapper, ParallelRasterWriter
 
 __all__ = [
     "io",
+    "CAP_PYRAMIDAL",
+    "CAP_RANGE_READABLE",
+    "CAP_TILED",
+    "RasterSink",
+    "RasterSource",
+    "as_sink",
+    "as_source",
     "ArraySource",
     "DecimatedSource",
     "RasterReader",
     "SyntheticScene",
     "make_spot6_pair",
+    "FileRangeReader",
+    "MemoryRangeReader",
+    "TiledSource",
+    "TileWriter",
+    "MosaicSource",
+    "SceneCatalog",
+    "SceneEntry",
+    "demo_catalog",
+    "demo_time_series",
     "MemoryMapper",
     "ParallelRasterWriter",
 ]

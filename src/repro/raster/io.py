@@ -16,7 +16,7 @@ from __future__ import annotations
 import json
 import os
 import threading
-from concurrent.futures import ThreadPoolExecutor
+import warnings
 from typing import Callable, List, Optional, Tuple
 
 import numpy as np
@@ -265,8 +265,14 @@ class StripWriter:
         self.close()
 
 
-def read_region(path: str, region: Optional[ImageRegion] = None) -> np.ndarray:
-    info = read_info(path)
+def _read_region_impl(
+    path: str,
+    region: Optional[ImageRegion] = None,
+    info: Optional[ImageInfo] = None,
+) -> np.ndarray:
+    """Window read on an RTIF file — the container primitive behind
+    :meth:`repro.raster.sources.RasterReader.read_region`."""
+    info = info if info is not None else read_info(path)
     region = region or info.full_region
     if region.col0 == 0 and region.cols == info.cols:
         offset = HEADER_BYTES + region.row0 * info.cols * info.bytes_per_pixel
@@ -283,33 +289,58 @@ def read_region(path: str, region: Optional[ImageRegion] = None) -> np.ndarray:
     return np.array(mm[region.row0:region.row1, region.col0:region.col1])
 
 
+# -- deprecated free-function surface ----------------------------------------
+# The read_region / parallel_read / parallel_write trio collapsed into the
+# Source/Sink protocol (RasterReader.read_region / .read_many and
+# ParallelRasterWriter.write_many).  These wrappers keep seed-era call sites
+# working for one release.
+
+
+def read_region(path: str, region: Optional[ImageRegion] = None) -> np.ndarray:
+    """Deprecated: use ``RasterReader(path).read_region(region)``."""
+    warnings.warn(
+        "repro.raster.io.read_region is deprecated; use "
+        "RasterReader(path).read_region(region)",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    return _read_region_impl(path, region)
+
+
 def parallel_write(
     path: str,
     info: ImageInfo,
     strips: List[Tuple[ImageRegion, np.ndarray]],
     n_writers: int = 1,
 ) -> None:
-    """Write many strips with ``n_writers`` concurrent writers (thread-level
-    stand-in for the paper's per-process MPI-IO ranks; used by the Fig. 1
-    I/O scaling benchmark)."""
-    create(path, info)
-    if n_writers <= 1:
-        for region, data in strips:
-            write_strip(path, info, region, data)
-        return
-    with ThreadPoolExecutor(max_workers=n_writers) as pool:
-        futs = [
-            pool.submit(write_strip, path, info, region, data)
-            for region, data in strips
-        ]
-        for f in futs:
-            f.result()
+    """Deprecated: use ``ParallelRasterWriter(path)`` with ``write_many``
+    (thread-level stand-in for the paper's per-process MPI-IO ranks)."""
+    warnings.warn(
+        "repro.raster.io.parallel_write is deprecated; use "
+        "ParallelRasterWriter(path).write_many(strips, n_writers)",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    from repro.raster.mappers import ParallelRasterWriter
+
+    sink = ParallelRasterWriter(path)
+    sink.begin(info)
+    try:
+        sink.write_many(strips, n_writers=n_writers)
+    finally:
+        sink.end()
 
 
 def parallel_read(
     path: str, regions: List[ImageRegion], n_readers: int = 1
 ) -> List[np.ndarray]:
-    if n_readers <= 1:
-        return [read_region(path, r) for r in regions]
-    with ThreadPoolExecutor(max_workers=n_readers) as pool:
-        return list(pool.map(lambda r: read_region(path, r), regions))
+    """Deprecated: use ``RasterReader(path).read_many(regions, n_readers)``."""
+    warnings.warn(
+        "repro.raster.io.parallel_read is deprecated; use "
+        "RasterReader(path).read_many(regions, n_readers)",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    from repro.raster.sources import RasterReader
+
+    return RasterReader(path).read_many(regions, n_readers=n_readers)

@@ -8,9 +8,10 @@ import numpy as np
 from repro.core.process_object import ImageInfo, Mapper
 from repro.core.region import ImageRegion
 from repro.raster import io as rio
+from repro.raster.protocol import CAP_RANGE_READABLE, RasterSink
 
 
-class MemoryMapper(Mapper):
+class MemoryMapper(Mapper, RasterSink):
     """Assemble produced regions into one in-memory array (paper: "interfacing
     with some other system")."""
 
@@ -32,7 +33,7 @@ class MemoryMapper(Mapper):
         )
 
 
-class ParallelRasterWriter(Mapper):
+class ParallelRasterWriter(Mapper, RasterSink):
     """The paper's parallel GeoTiff writer (§II.D): every worker writes its
     strips directly into their final in-file position (MPI-IO semantics via
     pwrite on disjoint byte ranges of one shared descriptor).  Static load
@@ -49,6 +50,9 @@ class ParallelRasterWriter(Mapper):
     docstring for what "committed" means)."""
 
     thread_safe = True  # pwrite on disjoint ranges, one descriptor
+
+    def capabilities(self) -> frozenset:
+        return frozenset({CAP_RANGE_READABLE})
 
     def __init__(self, path: str, name: Optional[str] = None):
         super().__init__(name or f"write:{path}")

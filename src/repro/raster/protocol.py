@@ -1,0 +1,170 @@
+"""One Source/Sink protocol for raster IO (the cloud-native redesign).
+
+Every raster endpoint — flat RTIF files, in-memory arrays, synthetic scenes,
+decimated views, tiled pyramidal containers — speaks the same two mixins:
+
+  * :class:`RasterSource` rides on top of :class:`~repro.core.Source`: a
+    uniform ``read_region`` / ``read_many`` / ``info`` / ``overview(level)``
+    surface plus a ``capabilities()`` set that tells callers *how* the
+    endpoint serves pixels (``tiled`` internal layout, ``pyramidal`` stored
+    overview levels, ``range-readable`` byte-range access — the COG triad).
+  * :class:`RasterSink` rides on top of :class:`~repro.core.Mapper`:
+    ``write_region`` / ``write_many`` mirror the source surface, so the
+    executors' ``consume`` protocol and ad-hoc strip writing share one code
+    path.
+
+The free-function trio ``io.read_region`` / ``io.parallel_read`` /
+``io.parallel_write`` collapses into these methods (thin deprecated wrappers
+remain in :mod:`repro.raster.io` for one release).
+
+``overview(level)`` is the zoom contract of the tile-serving engine: level
+``L`` is the ``2**L``-decimated view where overview pixel ``(r, c)`` equals
+full-resolution pixel ``(r * 2**L, c * 2**L)``.  The default synthesizes it
+with :class:`~repro.raster.sources.DecimatedSource` (tile-window reads on the
+base, never the full image); ``pyramidal`` sources override it to serve
+*stored* levels instead.
+"""
+from __future__ import annotations
+
+import os
+from concurrent.futures import ThreadPoolExecutor
+from typing import Iterable, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.process_object import ImageInfo, Mapper, Source
+from repro.core.region import ImageRegion
+
+#: capability flags (a subset of the COG feature triad)
+CAP_TILED = "tiled"  # pixels live in fixed-size internal tiles
+CAP_PYRAMIDAL = "pyramidal"  # stored overview levels (not synthesized)
+CAP_RANGE_READABLE = "range-readable"  # windows read as byte ranges
+
+
+class RasterSource:
+    """Protocol mixin for raster sources (mixed into :class:`Source` types).
+
+    Host-side callers use ``read_region`` (numpy out); the execution engine
+    keeps calling ``generate`` (jax out) — both resolve through the same
+    region math, so a source implements pixels exactly once.
+    """
+
+    def capabilities(self) -> frozenset:
+        """Which of {tiled, pyramidal, range-readable} this endpoint serves."""
+        return frozenset()
+
+    def info(self) -> ImageInfo:
+        return self.output_info()
+
+    def read_region(self, region: Optional[ImageRegion] = None) -> np.ndarray:
+        """Read one in-image window (whole image when ``region`` is None)."""
+        if region is None:
+            region = self.output_info().full_region
+        return np.asarray(self.generate(region))
+
+    def read_many(
+        self, regions: Iterable[ImageRegion], n_readers: int = 1
+    ) -> List[np.ndarray]:
+        """Read many windows, optionally with concurrent reader threads
+        (the protocol successor of ``io.parallel_read``)."""
+        regions = list(regions)
+        if n_readers <= 1:
+            return [self.read_region(r) for r in regions]
+        with ThreadPoolExecutor(max_workers=n_readers) as pool:
+            return list(pool.map(self.read_region, regions))
+
+    def overview(self, level: int) -> Source:
+        """The ``2**level``-decimated zoom view (level 0 is this source)."""
+        if level <= 0:
+            return self
+        from repro.raster.sources import DecimatedSource
+
+        return DecimatedSource(self, 2 ** int(level))
+
+    def read_ahead(self, regions: Iterable[ImageRegion]) -> int:
+        """Hint: these windows will be read soon.  Returns how many fetches
+        were scheduled (0 for sources with nothing to prefetch — the default).
+        The streaming engine hands its region schedule here before the region
+        loop so range-readable sources overlap fetches with compute."""
+        return 0
+
+
+class RasterSink:
+    """Protocol mixin for raster sinks (mixed into :class:`Mapper` types)."""
+
+    def capabilities(self) -> frozenset:
+        return frozenset()
+
+    def write_region(self, region: ImageRegion, data: np.ndarray) -> None:
+        """Write one region (alias of the Mapper ``consume`` protocol)."""
+        self.consume(region, data)
+
+    def write_many(
+        self,
+        strips: Iterable[Tuple[ImageRegion, np.ndarray]],
+        n_writers: int = 1,
+    ) -> None:
+        """Write many regions, optionally with concurrent writer threads
+        (the protocol successor of ``io.parallel_write``).  Concurrency is
+        only used when the sink declares ``thread_safe``."""
+        strips = list(strips)
+        if n_writers <= 1 or not getattr(self, "thread_safe", False):
+            for region, data in strips:
+                self.write_region(region, data)
+            return
+        with ThreadPoolExecutor(max_workers=n_writers) as pool:
+            futs = [
+                pool.submit(self.write_region, region, data)
+                for region, data in strips
+            ]
+            for f in futs:
+                f.result()
+
+
+def as_source(obj) -> Source:
+    """Coerce ``obj`` to a protocol source.
+
+    Sources pass through; a path opens the right reader by container magic
+    (RTIF → :class:`~repro.raster.sources.RasterReader`, RTIC →
+    :class:`~repro.raster.tiled.TiledSource`); an ndarray wraps in an
+    :class:`~repro.raster.sources.ArraySource`.
+    """
+    if isinstance(obj, Source):
+        return obj
+    if isinstance(obj, (str, os.PathLike)):
+        from repro.raster import io as rio
+        from repro.raster.sources import RasterReader
+        from repro.raster.tiled import TILED_MAGIC, TiledSource
+
+        path = os.fspath(obj)
+        with open(path, "rb") as f:
+            magic = f.read(len(rio.MAGIC))
+        if magic == TILED_MAGIC:
+            return TiledSource(path)
+        return RasterReader(path)
+    if isinstance(obj, np.ndarray):
+        from repro.raster.sources import ArraySource
+
+        return ArraySource(obj)
+    raise TypeError(f"cannot make a RasterSource from {type(obj).__name__}")
+
+
+def as_sink(obj) -> Mapper:
+    """Coerce ``obj`` to a protocol sink.
+
+    Mappers pass through; a path opens the matching writer by extension
+    (``.rtic`` → :class:`~repro.raster.tiled.TileWriter`, anything else →
+    :class:`~repro.raster.mappers.ParallelRasterWriter`).
+    """
+    if isinstance(obj, Mapper):
+        return obj
+    if isinstance(obj, (str, os.PathLike)):
+        path = os.fspath(obj)
+        if path.endswith(".rtic"):
+            from repro.raster.tiled import TileWriter
+
+            return TileWriter(path)
+        from repro.raster.mappers import ParallelRasterWriter
+
+        return ParallelRasterWriter(path)
+    raise TypeError(f"cannot make a RasterSink from {type(obj).__name__}")

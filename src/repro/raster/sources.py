@@ -14,9 +14,10 @@ import numpy as np
 from repro.core.process_object import GeoTransform, ImageInfo, Source
 from repro.core.region import ImageRegion
 from repro.raster import io as rio
+from repro.raster.protocol import CAP_RANGE_READABLE, RasterSource
 
 
-class RasterReader(Source):
+class RasterReader(Source, RasterSource):
     """Reads requested windows from an RTIF file (paper: image file reader)."""
 
     def __init__(self, path: str, name: Optional[str] = None):
@@ -24,14 +25,21 @@ class RasterReader(Source):
         self.path = path
         self._info = rio.read_info(path)
 
+    def capabilities(self) -> frozenset:
+        # flat RTIF: any window is a (set of) byte range(s) of the file
+        return frozenset({CAP_RANGE_READABLE})
+
     def output_info(self) -> ImageInfo:
         return self._info
 
+    def read_region(self, region: Optional[ImageRegion] = None) -> np.ndarray:
+        return rio._read_region_impl(self.path, region, info=self._info)
+
     def generate(self, out_region: ImageRegion) -> jnp.ndarray:
-        return jnp.asarray(rio.read_region(self.path, out_region))
+        return jnp.asarray(self.read_region(out_region))
 
 
-class ArraySource(Source):
+class ArraySource(Source, RasterSource):
     """Wraps an in-memory array (rows, cols, bands)."""
 
     def __init__(
@@ -57,7 +65,7 @@ class ArraySource(Source):
         return jnp.asarray(self.array[rs, cs])
 
 
-class SyntheticScene(Source):
+class SyntheticScene(Source, RasterSource):
     """Deterministic synthetic very-high-resolution scene (Spot6-like).
 
     Pixels are computed from absolute (row, col) coordinates: smooth terrain
@@ -117,7 +125,7 @@ class SyntheticScene(Source):
         return vals.astype(self.dtype)
 
 
-class DecimatedSource(Source):
+class DecimatedSource(Source, RasterSource):
     """A zoom-level view of another source: every ``factor``-th pixel.
 
     The tile-serving engine registers one pipeline per zoom; zoom ``z`` reads
@@ -155,6 +163,15 @@ class DecimatedSource(Source):
             scaled,
             info.nodata,
         )
+
+    def overview(self, level: int) -> Source:
+        """Compose factors instead of nesting views: the level-``L`` overview
+        of a ``factor``-decimated view decimates the *base* by
+        ``factor * 2**L`` (one strided read, and — because ceil-division
+        composes — identical pixels to the nested view)."""
+        if level <= 0:
+            return self
+        return DecimatedSource(self.base, self.factor * 2 ** int(level))
 
     def generate(self, out_region: ImageRegion, origin=None) -> jnp.ndarray:
         f = self.factor

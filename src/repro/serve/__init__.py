@@ -1,6 +1,6 @@
 from repro.serve.engine import build_prefill_step, build_decode_step, ServeEngine
 from repro.serve.admission import AdmissionController, AdmissionStats, Shed
-from repro.serve.tiles import TileGrid, TileRequest, TileServer
+from repro.serve.tiles import TileGrid, TileRequest, TileServer, zoom_view
 
 __all__ = [
     "build_prefill_step",
@@ -12,4 +12,5 @@ __all__ = [
     "TileGrid",
     "TileRequest",
     "TileServer",
+    "zoom_view",
 ]

@@ -48,6 +48,28 @@ from repro.data.pipeline import Prefetcher
 from repro.serve.admission import AdmissionController, Shed
 
 
+def zoom_view(source, zoom: int):
+    """The source to read when serving zoom level ``zoom``.
+
+    Routed through the Source/Sink protocol's ``overview(level)``: pyramidal
+    sources (tiled RTIC containers) serve their *stored* overview levels —
+    a zoom tile then costs a few range reads of pre-decimated data — and
+    everything else falls back to an on-the-fly
+    :class:`~repro.raster.sources.DecimatedSource` wrap (``2**zoom``
+    decimation, tile-window reads on the base).  Both views sample the same
+    grid (level pixel ``(r, c)`` = base pixel ``(r*2**z, c*2**z)``), so the
+    served bytes are identical either way.
+    """
+    if zoom <= 0:
+        return source
+    overview = getattr(source, "overview", None)
+    if callable(overview):
+        return overview(int(zoom))
+    from repro.raster.sources import DecimatedSource
+
+    return DecimatedSource(source, 2 ** int(zoom))
+
+
 @dataclasses.dataclass(frozen=True)
 class TileRequest:
     """One map-tile request: which pipeline, which zoom level, which tile."""

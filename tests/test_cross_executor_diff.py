@@ -51,6 +51,10 @@ CASES = {
     # P7 source is 24 rows -> 96 output rows: divisible at 2/4/8 devices,
     # ragged at 5 with H=20 still a multiple of the resampling ratio
     "P7": (lambda: PP.p7_resampling(_src(24, 24)), False),
+    # P8/P9 read through the catalog layer (MosaicSource host-side
+    # assembly); the compiled stages are pointwise, so bit-exact
+    "P8": (lambda: PP.p8_mosaic(rows=48, cols=32, seed=3), True),
+    "P9": (lambda: PP.p9_ndvi_composite(rows=48, cols=32, seed=5), True),
     "IO": (lambda: PP.io_passthrough(_src()), True),
 }
 
@@ -117,6 +121,8 @@ CASES = {{
     "P5": (lambda: PP.p5_meanshift(src(), hs=2, n_iter=2), True),
     "P6": (lambda: PP.p6_conversion(src()), True),
     "P7": (lambda: PP.p7_resampling(src(24, 24)), False),
+    "P8": (lambda: PP.p8_mosaic(rows=48, cols=32, seed=3), True),
+    "P9": (lambda: PP.p9_ndvi_composite(rows=48, cols=32, seed=5), True),
     "IO": (lambda: PP.io_passthrough(src()), True),
 }}
 
@@ -407,7 +413,6 @@ def test_orchestrator_pipelined_vs_barrier_differential():
     from repro.core import Orchestrator, PlanCache, Stage
     from repro.filters import BandMath, SobelGradient, gaussian_smoothing
     from repro.raster import ParallelRasterWriter, RasterReader
-    from repro.raster import io as rio
 
     def make_stages():
         def build_src(_inputs, out):
@@ -462,13 +467,13 @@ def test_orchestrator_pipelined_vs_barrier_differential():
     cache_b = PlanCache()
     with Orchestrator(make_stages(), plan_cache=cache_b) as orch:
         res = orch.run(pipelined=False)
-        barrier = {k: rio.read_region(v.path) for k, v in res.items()}
+        barrier = {k: RasterReader(v.path).read_region() for k, v in res.items()}
 
     cache_p = PlanCache()
     with Orchestrator(make_stages(), plan_cache=cache_p, pipelined=True,
                       queue_capacity=2) as orch:
         res = orch.run()
-        pipelined = {k: rio.read_region(v.path) for k, v in res.items()}
+        pipelined = {k: RasterReader(v.path).read_region() for k, v in res.items()}
         stats = dict(orch.edge_stats)
 
     assert set(barrier) == set(pipelined) == {"src", "smooth", "edges", "scale"}

@@ -10,7 +10,6 @@ from repro.filters import (
     gaussian_smoothing,
 )
 from repro.raster import MemoryMapper, ParallelRasterWriter, RasterReader, SyntheticScene
-from repro.raster import io as rio
 
 
 def test_gaussian_kernel_normalized():
@@ -64,7 +63,7 @@ def test_orchestrator_two_stage_dag(tmp_path):
     )
     results = orch.run()
     assert set(results) == {"smooth", "edges"}
-    staged = rio.read_region(results["edges"].path)
+    staged = RasterReader(results["edges"].path).read_region()
 
     # fused oracle
     p = Pipeline()
@@ -114,7 +113,7 @@ def test_orchestrator_mixed_streaming_and_spmd_stages(tmp_path):
     results = orch.run()
     assert results["smooth"].cache_stats is cache.stats
     assert results["edges"].cache_stats is cache.stats
-    staged = rio.read_region(results["edges"].path)
+    staged = RasterReader(results["edges"].path).read_region()
 
     p = Pipeline()
     s = p.add(SyntheticScene(40, 32, bands=1, dtype=np.float32, seed=5))

@@ -43,7 +43,6 @@ from repro.core.process_object import Filter
 from repro.core.region import ImageRegion
 from repro.filters import BandMath, Concat, SobelGradient, gaussian_smoothing
 from repro.raster import ParallelRasterWriter, RasterReader, SyntheticScene
-from repro.raster import io as rio
 
 try:  # CI installs hypothesis via the test extras; local runs may lack it
     from hypothesis import HealthCheck, given, settings, strategies as st
@@ -159,12 +158,12 @@ def _run_both(stages_fn, queue_capacity=2, max_workers=None, timeout=120.0):
     cache_b, cache_p = PlanCache(), PlanCache()
     with Orchestrator(stages_fn(), plan_cache=cache_b) as orch:
         res = run_watchdogged(orch, timeout)
-        barrier = {k: rio.read_region(v.path) for k, v in res.items()}
+        barrier = {k: RasterReader(v.path).read_region() for k, v in res.items()}
     with Orchestrator(stages_fn(), plan_cache=cache_p, pipelined=True,
                       queue_capacity=queue_capacity,
                       max_workers=max_workers) as orch:
         res = run_watchdogged(orch, timeout)
-        pipelined = {k: rio.read_region(v.path) for k, v in res.items()}
+        pipelined = {k: RasterReader(v.path).read_region() for k, v in res.items()}
         stats = dict(orch.edge_stats)
     return barrier, pipelined, cache_b, cache_p, stats
 

@@ -18,13 +18,19 @@ from repro.raster import RasterReader, ParallelRasterWriter, SyntheticScene
 from repro.core import Pipeline, StreamingExecutor
 
 
+def _read(path, region=None):
+    """Protocol read (the deprecated free function has its own test in
+    test_tiled_io.py)."""
+    return RasterReader(path).read_region(region)
+
+
 def test_roundtrip(tmp_path):
     path = str(tmp_path / "img.rtif")
     info = ImageInfo(50, 40, 3, np.uint16, GeoTransform(1, 2, 6.0, -6.0))
     data = np.arange(50 * 40 * 3, dtype=np.uint16).reshape(50, 40, 3)
     rio.create(path, info)
     rio.write_strip(path, info, whole(50, 40), data)
-    got = rio.read_region(path)
+    got = _read(path)
     np.testing.assert_array_equal(got, data)
     info2 = rio.read_info(path)
     assert (info2.rows, info2.cols, info2.bands) == (50, 40, 3)
@@ -54,8 +60,11 @@ def _check_parallel_strip_writes(tmp_path_factory, n_writers, rows):
     )
     strips = [(r, data[r.slices()]) for r in regions]
     path = str(tmp / "par.rtif")
-    rio.parallel_write(path, info, strips, n_writers=n_writers)
-    np.testing.assert_array_equal(rio.read_region(path), data)
+    w = ParallelRasterWriter(path)
+    w.begin(info)
+    w.write_many(strips, n_writers=n_writers)
+    w.end()
+    np.testing.assert_array_equal(_read(path), data)
 
 
 def test_windowed_read(tmp_path):
@@ -65,7 +74,7 @@ def test_windowed_read(tmp_path):
     rio.create(path, info)
     rio.write_strip(path, info, whole(30, 20), data)
     win = ImageRegion((5, 3), (10, 7))
-    np.testing.assert_array_equal(rio.read_region(path, win), data[5:15, 3:10])
+    np.testing.assert_array_equal(_read(path, win), data[5:15, 3:10])
 
 
 def test_reader_writer_pipeline(tmp_path):
@@ -133,7 +142,7 @@ def test_strip_writer_coalesces_contiguous_runs(tmp_path):
             w.write(region, block)
     assert len(w.calls) == 1  # 8 strips → 1 syscall
     assert w.calls[0] == (rio.HEADER_BYTES, data.nbytes)
-    np.testing.assert_array_equal(rio.read_region(path), data)
+    np.testing.assert_array_equal(_read(path), data)
 
 
 @needs_pwrite
@@ -148,7 +157,7 @@ def test_strip_writer_flushes_on_gap_and_cap(tmp_path):
         for region, block in reversed(strips):
             w.write(region, block)
     assert len(w.calls) == len(strips)
-    np.testing.assert_array_equal(rio.read_region(path), data)
+    np.testing.assert_array_equal(_read(path), data)
 
     # byte cap bounds buffered memory: 2 strips per flush → 4 syscalls
     cap = 2 * strips[0][1].nbytes
@@ -156,7 +165,7 @@ def test_strip_writer_flushes_on_gap_and_cap(tmp_path):
         for region, block in strips:
             w.write(region, block)
     assert len(w.calls) == 4
-    np.testing.assert_array_equal(rio.read_region(path), data)
+    np.testing.assert_array_equal(_read(path), data)
 
     # coalesce_bytes=0 keeps the seed's strict one-syscall-per-strip path
     with RecordingStripWriter(path, info, coalesce_bytes=0) as w:
@@ -183,16 +192,16 @@ def test_strip_writer_coalescing_disabled_writes_through(tmp_path):
         w.write(region0, buf)
         buf[:] = -1.0  # caller reuses its buffer: already-written data stays
         # visible immediately — the disabled path buffers nothing
-        np.testing.assert_array_equal(rio.read_region(path, region0), block0)
+        np.testing.assert_array_equal(_read(path, region0), block0)
         for region, block in reversed(strips[1:]):  # out-of-order is fine
             w.write(region, block)
-        np.testing.assert_array_equal(rio.read_region(path), data)
+        np.testing.assert_array_equal(_read(path), data)
         assert len(w.calls) == len(strips)  # one syscall per strip, no runs
         # a tile write (not full-width) goes through row segments
         tile = ImageRegion((2, 2), (3, 3))
         patch = np.full((3, 3, 2), 9.0, np.float32)
         w.write(tile, patch)
-        np.testing.assert_array_equal(rio.read_region(path, tile), patch)
+        np.testing.assert_array_equal(_read(path, tile), patch)
         assert len(w.calls) == len(strips) + tile.rows
         w.flush()  # flush on an empty run is a no-op, not an error
         assert len(w.calls) == len(strips) + tile.rows
@@ -209,7 +218,7 @@ def test_strip_writer_flush_makes_data_visible(tmp_path):
         w.write(ImageRegion((0, 0), (4, 4)), data[:4])
         w.flush()  # explicit flush lands the pending run
         np.testing.assert_array_equal(
-            rio.read_region(path, ImageRegion((0, 0), (4, 4))), data[:4]
+            _read(path, ImageRegion((0, 0), (4, 4))), data[:4]
         )
         w.write(ImageRegion((4, 0), (4, 4)), data[4:])
-    np.testing.assert_array_equal(rio.read_region(path), data)
+    np.testing.assert_array_equal(_read(path), data)

@@ -382,8 +382,7 @@ def test_run_pool_persistent_stats_any_scheduler(scheduler):
 def test_raster_writer_tile_split(tmp_path):
     """StripWriter's windowed pwrite path: tile splits (not full-width) land
     every pixel in its final in-file position."""
-    from repro.raster import ParallelRasterWriter
-    from repro.raster import io as rio
+    from repro.raster import ParallelRasterWriter, RasterReader
 
     path = str(tmp_path / "tiles.rtif")
     p, m = PP.p6_conversion(
@@ -392,7 +391,7 @@ def test_raster_writer_tile_split(tmp_path):
     run_pool(p, m, TileSplitter(16, 12), n_workers=3, scheduler="work_stealing")
     p2, m2 = PP.p6_conversion(_src(40, 28))
     whole = np.asarray(p2.pull(m2, p2.info(m2).full_region))
-    np.testing.assert_array_equal(rio.read_region(path), whole)
+    np.testing.assert_array_equal(RasterReader(path).read_region(), whole)
 
 
 def test_run_pool_eager_path():
